@@ -1,0 +1,113 @@
+"""Shared benchmark substrate: a TRAINED small inception-style classifier.
+
+The paper's observation (Fig. 3: classification probability rises sharply in
+a small α-interval) only manifests on a *confident* model, so we train the
+CNN to high accuracy on a deterministic synthetic 10-class task first
+(quadrant-pattern images). Trained params are cached in results/.
+
+All benchmarks print CSV-ish tables AND return dicts so run.py can aggregate
+into results/benchmarks.json (EXPERIMENTS.md §Paper-claims reads from it).
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_cnn import CONFIG as CNN_CONFIG
+from repro.models import cnn
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+_CKPT = os.path.join(RESULTS_DIR, "bench_cnn_params.npz")
+
+
+def synthetic_images(key: jax.Array, n: int, cfg=CNN_CONFIG, *, background_frac: float = 0.0):
+    """Class 1..9 = bright blob at a class-specific location + texture;
+    class 0 = BACKGROUND (any pattern at low contrast).
+
+    The background class is the key to reproducing the paper's regime: like
+    ImageNet models, the trained classifier then has a *contrast threshold* —
+    along the black→image IG path the prediction stays "background" until a
+    sharp transition α*, concentrating gradient mass in a narrow interval
+    (paper Fig. 3). ``background_frac``>0 mixes in dimmed copies labeled 0
+    for training; eval batches use frac 0 and labels 1..9.
+    """
+    kx, kn, kb, ks = jax.random.split(key, 4)
+    labels = jax.random.randint(kx, (n,), 1, cfg.num_classes)
+    s = cfg.image_size
+    yy, xx = jnp.mgrid[0:s, 0:s].astype(jnp.float32) / s
+    cx = (labels % 3).astype(jnp.float32)[:, None, None] / 3.0 + 0.15
+    cy = ((labels // 3) % 3).astype(jnp.float32)[:, None, None] / 3.0 + 0.15
+    blob = jnp.exp(-(((xx - cx) ** 2 + (yy - cy) ** 2) / 0.02))
+    tex = jnp.sin((labels[:, None, None] + 2) * 3.0 * xx) * 0.3
+    img = blob + tex + 0.1 * jax.random.normal(kn, (n, s, s))
+    img = jnp.clip(img, 0, 2) / 2.0
+    if background_frac > 0:
+        # dim a random subset far below the contrast threshold -> class 0
+        is_bg = jax.random.uniform(kb, (n,)) < background_frac
+        scale = jax.random.uniform(ks, (n,), minval=0.02, maxval=0.25)
+        img = jnp.where(is_bg[:, None, None], img * scale[:, None, None], img)
+        labels = jnp.where(is_bg, 0, labels)
+    return jnp.repeat(img[..., None], cfg.channels, axis=-1), labels
+
+
+def train_cnn(key: jax.Array, steps: int = 300, batch: int = 64, lr: float = 2e-3):
+    from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+    cfg = CNN_CONFIG
+    params = cnn.init(cfg, key)
+    ocfg = AdamWConfig(lr=lr, warmup_steps=20, total_steps=steps, weight_decay=0.0)
+    opt = adamw_init(params)
+
+    @jax.jit
+    def step(params, opt, k):
+        imgs, labels = synthetic_images(k, batch, background_frac=0.35)
+
+        def loss_fn(p):
+            logits = cnn.forward(cfg, p, imgs)
+            logp = jax.nn.log_softmax(logits)
+            return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], 1))
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt, _ = adamw_update(ocfg, grads, opt, params)
+        return params, opt, loss
+
+    for i in range(steps):
+        params, opt, loss = step(params, opt, jax.random.fold_in(key, i))
+    return params, float(loss)
+
+
+def load_or_train_cnn(key=None):
+    key = key if key is not None else jax.random.PRNGKey(42)
+    if os.path.exists(_CKPT):
+        data = np.load(_CKPT)
+        leaves, treedef = jax.tree.flatten(cnn.param_defs(CNN_CONFIG), is_leaf=lambda x: hasattr(x, "shape"))
+        params = jax.tree.unflatten(treedef, [jnp.asarray(data[f"leaf_{i}"]) for i in range(len(leaves))])
+        return params
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    params, loss = train_cnn(key)
+    leaves = jax.tree.leaves(params)
+    np.savez(_CKPT, **{f"leaf_{i}": np.asarray(p) for i, p in enumerate(leaves)})
+    print(f"# trained bench CNN: final loss {loss:.4f}")
+    return params
+
+
+def cnn_prob_fn(params):
+    """f(images, targets) -> target-class probability (the paper's f)."""
+    return partial(cnn.prob_fn, CNN_CONFIG, params)
+
+
+def eval_batch(n: int = 8, key=None):
+    """Confidently-classified eval images + their predicted labels."""
+    key = key if key is not None else jax.random.PRNGKey(7)
+    imgs, labels = synthetic_images(key, n)
+    return imgs, labels
+
+
+def accuracy(params, n=256) -> float:
+    imgs, labels = synthetic_images(jax.random.PRNGKey(99), n, background_frac=0.3)
+    pred = jnp.argmax(cnn.forward(CNN_CONFIG, params, imgs), -1)
+    return float((pred == labels).mean())

@@ -1,0 +1,89 @@
+"""Paper Fig. 5(a,b) + Fig. 2(b): convergence delta vs steps, per schedule.
+
+Fig 5(a): delta(m) for uniform / paper(n_int=2,4,8,16) / warp / gauss.
+Fig 5(b): min steps to reach delta_th, + reduction factor vs uniform.
+Also reproduces the paper's n_int>8 degradation observation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import cnn_prob_fn, eval_batch, load_or_train_cnn
+from repro.core import ig, probes, schedule
+
+M_GRID = (16, 24, 32, 48, 64, 96, 128, 192, 256, 384)
+DELTA_GRID = (0.02, 0.015, 0.01, 0.005)
+
+
+def method_schedules(f, x, bl, t):
+    """method name -> (schedule builder taking m, probe_forward_count)."""
+    out = {"uniform": (lambda m: schedule.uniform(m), 0)}
+    for n_int in (2, 4, 8, 16):
+        vals = probes.boundary_values(f, x, bl, t, n_int)
+        out[f"paper_n{n_int}"] = (
+            lambda m, v=vals: schedule.paper(v, m),
+            n_int + 1,
+        )
+    vals8 = probes.boundary_values(f, x, bl, t, 8)
+    out["warp_n8"] = (lambda m: schedule.warp(vals8, m), 9)
+    out["gauss_n8"] = (lambda m: schedule.gauss(vals8, m), 9)
+    return out
+
+
+def run(batch_size: int = 8, m_grid=M_GRID, delta_grid=DELTA_GRID) -> dict:
+    params = load_or_train_cnn()
+    f = cnn_prob_fn(params)
+    x, t = eval_batch(batch_size)
+    bl = jnp.zeros_like(x)
+
+    methods = method_schedules(f, x, bl, t)
+    curves: dict[str, list] = {}
+    for name, (build, _probe_cost) in methods.items():
+        n_int = int(name.split("_n")[-1]) if "_n" in name else 0
+        ds = []
+        for m in m_grid:
+            if m < n_int:  # paper allocation needs >= 1 step per interval
+                ds.append(float("nan"))
+                continue
+            res = ig.attribute(f, x, bl, build(m), t)
+            ds.append(float(res.delta.mean()))
+        curves[name] = ds
+
+    # Fig 5(b): min m meeting each threshold
+    steps_to = {name: {} for name in methods}
+    for name, ds in curves.items():
+        for th in delta_grid:
+            ok = [m for m, d in zip(m_grid, ds) if not np.isnan(d) and d <= th]
+            steps_to[name][th] = min(ok) if ok else None
+
+    print("\n== Fig 5(a): mean convergence delta vs total steps m ==")
+    print("m," + ",".join(methods))
+    for i, m in enumerate(m_grid):
+        print(f"{m}," + ",".join(f"{curves[n][i]:.5f}" for n in methods))
+
+    print("\n== Fig 5(b): steps to reach delta_th (x-fold reduction vs uniform) ==")
+    print("delta_th," + ",".join(methods))
+    for th in delta_grid:
+        row = [str(th)]
+        for n in methods:
+            s = steps_to[n][th]
+            if s is None:
+                row.append("-")
+            elif n == "uniform":
+                row.append(f"{s}")
+            else:
+                u = steps_to["uniform"][th]
+                row.append(f"{s} ({u/s:.1f}x)" if u and s else f"{s}")
+        print(",".join(row))
+
+    return {"m_grid": list(m_grid), "curves": curves, "steps_to_threshold": steps_to}
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""Paper Fig. 2(a) + Fig. 6(a,b): measured wall-clock latency.
+
+Fig 2(a): latency vs m (normalized to m=1) — jitted end-to-end IG call.
+Fig 6(a): latency at iso-delta_th per schedule, speedup vs uniform.
+Fig 6(b): stage-1 (probe) latency overhead as % of total.
+
+CPU wall-clock here; the step-count reductions are hardware-independent
+(the paper's own argument), and §Roofline covers the TPU-side terms.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import cnn_prob_fn, eval_batch, load_or_train_cnn
+from repro.core import ig, probes, schedule
+from repro.core.api import Explainer
+
+
+def _time(fn, *args, repeats: int = 5) -> float:
+    fn(*args)  # warmup/compile
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def run(batch_size: int = 8, delta_grid=(0.02, 0.015, 0.01, 0.005), steps_to=None) -> dict:
+    params = load_or_train_cnn()
+    f = cnn_prob_fn(params)
+    x, t = eval_batch(batch_size)
+    bl = jnp.zeros_like(x)
+
+    # ---- Fig 2(a): latency vs m (uniform schedule)
+    lat_vs_m = {}
+    for m in (1, 2, 4, 8, 16, 32, 64, 128, 256):
+        sched = schedule.uniform(m)
+        fn = jax.jit(lambda x, bl, t, s=sched: ig.attribute(f, x, bl, s, t).attributions)
+        lat_vs_m[m] = _time(fn, x, bl, t)
+    base = lat_vs_m[1]
+    print("\n== Fig 2(a): latency vs m (normalized to m=1) ==")
+    print("m,latency_s,normalized")
+    for m, s in lat_vs_m.items():
+        print(f"{m},{s:.4f},{s/base:.2f}")
+
+    # ---- Fig 6(a): latency at iso-delta (needs steps_to from convergence)
+    iso = {}
+    if steps_to:
+        print("\n== Fig 6(a): latency to meet delta_th (speedup vs uniform) ==")
+        print("delta_th,method,m,latency_s,speedup")
+        for th in delta_grid:
+            u_m = steps_to["uniform"].get(th)
+            if not u_m:
+                continue
+            u_fn = jax.jit(
+                lambda x, bl, t, s=schedule.uniform(u_m): ig.attribute(f, x, bl, s, t).attributions
+            )
+            u_lat = _time(u_fn, x, bl, t)
+            iso[th] = {"uniform": {"m": u_m, "latency_s": u_lat, "speedup": 1.0}}
+            print(f"{th},uniform,{u_m},{u_lat:.4f},1.00")
+            for name in steps_to:
+                if name == "uniform" or steps_to[name].get(th) is None:
+                    continue
+                m = steps_to[name][th]
+                n_int = int(name.split("_n")[-1]) if "_n" in name else 4
+                method = name.split("_n")[0] if "_n" in name else name
+                ex = Explainer(f, method=method, m=m, n_int=n_int)
+                fn = jax.jit(lambda x, bl, t, e=ex: e.attribute(x, bl, t).attributions)
+                lat = _time(fn, x, bl, t)
+                iso[th][name] = {"m": m, "latency_s": lat, "speedup": u_lat / lat}
+                print(f"{th},{name},{m},{lat:.4f},{u_lat/lat:.2f}")
+
+    # ---- Fig 6(b): probe (stage-1) overhead fraction
+    print("\n== Fig 6(b): stage-1 probe overhead (% of total latency) ==")
+    print("n_int,m,probe_s,total_s,overhead_pct")
+    overhead = {}
+    for n_int in (2, 4, 8, 16):
+        probe_fn = jax.jit(lambda x, bl, t, n=n_int: probes.boundary_values(f, x, bl, t, n))
+        probe_lat = _time(probe_fn, x, bl, t)
+        for m in (64, 256):
+            ex = Explainer(f, method="paper", m=m, n_int=n_int)
+            fn = jax.jit(lambda x, bl, t, e=ex: e.attribute(x, bl, t).attributions)
+            total = _time(fn, x, bl, t)
+            pct = 100.0 * probe_lat / total
+            overhead[f"n{n_int}_m{m}"] = {"probe_s": probe_lat, "total_s": total, "pct": pct}
+            print(f"{n_int},{m},{probe_lat:.4f},{total:.4f},{pct:.1f}")
+
+    return {"latency_vs_m": {str(k): v for k, v in lat_vs_m.items()},
+            "iso_delta": {str(k): v for k, v in iso.items()},
+            "probe_overhead": overhead}
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""§Roofline table: renders the dry-run results (results/dryrun_*.json).
+
+Run ``python -m repro.launch.dryrun`` (and ``--multi-pod``) first; this
+benchmark aggregates the recorded per-cell cost/collective analysis into the
+three-term roofline table that EXPERIMENTS.md §Roofline embeds.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def load(mesh_name: str = "pod16x16") -> dict:
+    path = os.path.join(RESULTS_DIR, f"dryrun_{mesh_name}.json")
+    if not os.path.exists(path):
+        return {}
+    with open(path) as f:
+        return json.load(f)
+
+
+def run(mesh_name: str = "pod16x16") -> dict:
+    results = load(mesh_name)
+    if not results:
+        print(f"# no dry-run results for {mesh_name}; run repro.launch.dryrun first")
+        return {}
+    rows = []
+    print(f"\n== §Roofline ({mesh_name}): compute/memory/collective seconds per step ==")
+    print("cell,compute_s,memory_s,collective_s,dominant,useful_ratio,roofline_frac,hbm_GiB/chip")
+    for key in sorted(results):
+        rec = results[key]
+        if rec.get("status") == "skipped":
+            print(f"{key},skipped ({rec.get('reason','')})")
+            continue
+        if rec.get("status") != "ok":
+            print(f"{key},ERROR {rec.get('error','')[:80]}")
+            continue
+        r = rec["roofline"]
+        hbm = rec.get("memory", {}).get("argument_size_in_bytes", 0) + rec.get(
+            "memory", {}
+        ).get("temp_size_in_bytes", 0)
+        rows.append(r)
+        print(
+            f"{key},{r['compute_s']:.4f},{r['memory_s']:.4f},{r['collective_s']:.4f},"
+            f"{r['dominant']},{r['useful_ratio']:.3f},{r['roofline_fraction']:.3f},"
+            f"{hbm/2**30:.2f}"
+        )
+    if rows:
+        doms = {}
+        for r in rows:
+            doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+        print(f"\n# dominant-term histogram: {doms}")
+    return {"rows": rows}
+
+
+def main():
+    run("pod16x16")
+    run("pod2x16x16")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Benchmark harness entry point: one benchmark per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Order:
+  pathinfo     — Fig 3(b,c)  information content along the path
+  convergence  — Fig 5(a,b) + Fig 2(b)  delta vs m; steps to delta_th
+  latency      — Fig 2(a) + Fig 6(a,b)  wall-clock; iso-delta speedup; overhead
+  lm_convergence — beyond-paper: NUIG on the assigned LM families
+  roofline     — §Roofline table from the dry-run artifacts
+
+Aggregated JSON lands in results/benchmarks.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+from benchmarks import convergence, latency, lm_convergence, pathinfo, roofline_bench
+from benchmarks.common import RESULTS_DIR, accuracy, load_or_train_cnn
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="smaller grids (CI)")
+    args = ap.parse_args()
+
+    t0 = time.time()
+    params = load_or_train_cnn()
+    acc = accuracy(params)
+    print(f"# bench CNN accuracy: {acc:.3f}")
+    assert acc > 0.8, "benchmark classifier must be confident (paper Fig 3 regime)"
+
+    out = {"cnn_accuracy": acc}
+    out["pathinfo"] = pathinfo.run(batch_size=4 if args.fast else 8)
+    m_grid = (8, 16, 32, 64, 128) if args.fast else convergence.M_GRID
+    conv = convergence.run(batch_size=4 if args.fast else 8, m_grid=m_grid)
+    out["convergence"] = conv
+    out["latency"] = latency.run(
+        batch_size=4 if args.fast else 8, steps_to=conv["steps_to_threshold"]
+    )
+    out["lm_convergence"] = lm_convergence.run(
+        arch_ids=("llama3-8b",) if args.fast else lm_convergence.DEFAULT_ARCHS,
+        m=16 if args.fast else 32,
+    )
+    out["roofline_pod16x16"] = roofline_bench.run("pod16x16")
+    out["roofline_pod2x16x16"] = roofline_bench.run("pod2x16x16")
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, "benchmarks.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1, default=str)
+    print(f"\n# benchmarks done in {time.time()-t0:.0f}s -> {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,51 @@
+"""Quickstart: Non-Uniform IG (the paper) in five lines of user code.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Trains the small inception-style classifier, explains a prediction with the
+paper's NUIG vs baseline uniform IG, prints the ASCII heatmap and the
+convergence deltas at the same step budget (paper Fig 5a in miniature).
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import cnn_prob_fn, eval_batch, load_or_train_cnn
+from repro.core.api import Explainer
+
+
+def ascii_heatmap(attr: np.ndarray, width: int = 32) -> str:
+    """(H, W) -> shaded ASCII."""
+    a = np.abs(attr)
+    a = a / (a.max() + 1e-12)
+    chars = " .:-=+*#%@"
+    return "\n".join(
+        "".join(chars[min(int(v * (len(chars) - 1)), len(chars) - 1)] for v in row)
+        for row in a
+    )
+
+
+def main():
+    params = load_or_train_cnn()
+    f = cnn_prob_fn(params)  # f(images, targets) -> target-class probability
+    x, targets = eval_batch(1)
+    baseline = jnp.zeros_like(x)  # black image = missingness (paper §II)
+
+    m = 32  # total interpolation steps — paper uses 10-30x more for uniform
+    for method in ("uniform", "paper"):
+        explainer = Explainer(f, method=method, m=m, n_int=4)
+        res = explainer.attribute(x, baseline, targets)
+        print(f"\nmethod={method:8s} m={m} convergence delta={float(res.delta[0]):.5f}")
+
+    heat = np.asarray(res.attributions[0]).sum(-1)  # sum over channels
+    print("\nNUIG attribution heatmap (target class {}):".format(int(targets[0])))
+    print(ascii_heatmap(heat))
+    print("\nThe blob the classifier keys on lights up; the paper's schedule")
+    print("reaches the same completeness with a fraction of the steps.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Batched generation serving on the static-cache engine.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch qwen3-moe-30b-a3b
+
+Prefill a batch of prompts, decode greedily, report prefill/decode
+throughput. Works for every assigned arch family (dense/MoE/SSM/hybrid/VLM).
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, reduced
+from repro.models.registry import Model
+from repro.serve import ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b", choices=sorted(ARCHS))
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = reduced(ARCHS[args.arch])
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(1)
+    batch = {"tokens": jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab_size)}
+    if cfg.frontend == "vision":
+        batch["frontend"] = jnp.ones((args.batch, cfg.frontend_tokens, cfg.frontend_dim), jnp.bfloat16)
+    if cfg.frontend == "audio":
+        batch["frontend"] = jnp.ones((args.batch, cfg.encoder_seq, cfg.frontend_dim), jnp.bfloat16)
+
+    extra = cfg.frontend_tokens if cfg.frontend == "vision" else 0
+    engine = ServeEngine(cfg, params, max_len=extra + args.prompt_len + args.tokens)
+
+    t0 = time.perf_counter()
+    out = engine.generate(batch, args.tokens)
+    jax.block_until_ready(out)
+    wall = time.perf_counter() - t0
+    total_tokens = args.batch * args.tokens
+    print(
+        f"arch={cfg.name}: generated {out.shape} in {wall:.2f}s "
+        f"({total_tokens/wall:.0f} tok/s incl. compile+prefill)"
+    )
+    print("sample:", np.asarray(out[0])[:16], "...")
+
+
+if __name__ == "__main__":
+    main()

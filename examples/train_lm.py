@@ -1,0 +1,92 @@
+"""End-to-end training driver on the full substrate stack.
+
+    PYTHONPATH=src python examples/train_lm.py                # ~10M, quick
+    PYTHONPATH=src python examples/train_lm.py --params 100m --steps 300
+
+Exercises: synthetic data pipeline -> sharded/microbatched train_step with
+remat -> AdamW + cosine -> async checkpointing -> fault-tolerant driver loop
+with straggler monitoring. The --params 100m variant is the "train a ~100M
+model for a few hundred steps" deliverable (several hours on this CPU
+container; the default is a scaled-down smoke of the same path).
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import ARCHS
+from repro.configs.base import ArchConfig, LayerSpec
+from repro.data import DataConfig, SyntheticLM
+from repro.optim import AdamWConfig
+from repro.runtime import FaultConfig, StragglerMonitor, run_with_recovery
+from repro.train import TrainConfig, make_train_state, make_train_step
+
+SIZES = {
+    # llama-family dims scaled down; all divisible for the production mesh
+    "10m": dict(num_layers=4, d_model=256, num_heads=4, num_kv_heads=2, head_dim=64, d_ff=704, vocab_size=8192),
+    "100m": dict(num_layers=12, d_model=768, num_heads=12, num_kv_heads=4, head_dim=64, d_ff=2048, vocab_size=32768),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--params", default="10m", choices=sorted(SIZES))
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--microbatches", type=int, default=2)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm_ckpt")
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(
+        ARCHS["llama3-8b"], name=f"llama-{args.params}", **SIZES[args.params]
+    )
+    tcfg = TrainConfig(
+        optimizer=AdamWConfig(lr=3e-3, warmup_steps=20, total_steps=args.steps),
+        microbatches=args.microbatches,
+        remat=True,
+    )
+    state = make_train_state(cfg, tcfg, jax.random.PRNGKey(0))
+    n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(state.params))
+    print(f"model: {cfg.name}  params={n/1e6:.1f}M  steps={args.steps}")
+
+    step_fn = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0,))
+    data = SyntheticLM(DataConfig(cfg.vocab_size, args.seq, args.batch, seed=0))
+    ckpt = CheckpointManager(args.ckpt_dir, keep_n=2, save_async=True)
+    start, state = 0, state
+    restored_step, restored = ckpt.restore_latest(state)
+    if restored_step is not None:
+        state, start = restored, restored_step
+        print(f"resumed from checkpoint step {start}")
+
+    monitor = StragglerMonitor(FaultConfig())
+
+    def wrapped(state, batch):
+        b = {k: jnp.asarray(v) for k, v in batch.items()}
+        s, m = step_fn(state, b)
+        return s, {k: float(v) for k, v in m.items()}
+
+    t0 = time.time()
+    state, hist = run_with_recovery(
+        wrapped, state, data, num_steps=args.steps,
+        ckpt_manager=ckpt, ckpt_every=max(args.steps // 4, 10),
+        monitor=monitor, start_step=start,
+    )
+    dt = time.time() - t0
+    losses = [h["loss"] for h in hist]
+    print(
+        f"done: {len(hist)} steps, {dt/max(len(hist),1)*1e3:.0f} ms/step, "
+        f"loss {losses[0]:.3f} -> {losses[-1]:.3f}, stragglers={len(monitor.flagged)}"
+    )
+    assert losses[-1] < losses[0], "training must reduce loss"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Config registry: ``--arch <id>`` resolves here."""
+from __future__ import annotations
+
+from repro.configs.base import (
+    ArchConfig,
+    LayerSpec,
+    ShapeConfig,
+    LM_SHAPES,
+    SHAPES_BY_NAME,
+    TRAIN_4K,
+    PREFILL_32K,
+    DECODE_32K,
+    LONG_500K,
+    reduced,
+    shape_applicable,
+)
+
+from repro.configs import (  # noqa: E402
+    gemma3_27b,
+    internlm2_20b,
+    llama3_8b,
+    yi_9b,
+    qwen3_moe_30b_a3b,
+    qwen3_moe_235b_a22b,
+    mamba2_780m,
+    jamba_v01_52b,
+    whisper_tiny,
+    internvl2_26b,
+    paper_cnn,
+)
+
+# The 10 assigned architectures (the 40-cell dry-run grid iterates these).
+ARCHS: dict[str, ArchConfig] = {
+    c.name: c
+    for c in (
+        gemma3_27b.CONFIG,
+        internlm2_20b.CONFIG,
+        llama3_8b.CONFIG,
+        yi_9b.CONFIG,
+        qwen3_moe_30b_a3b.CONFIG,
+        qwen3_moe_235b_a22b.CONFIG,
+        mamba2_780m.CONFIG,
+        jamba_v01_52b.CONFIG,
+        whisper_tiny.CONFIG,
+        internvl2_26b.CONFIG,
+    )
+}
+
+PAPER_CNN = paper_cnn.CONFIG
+
+
+def get_config(name: str) -> ArchConfig:
+    if name in ARCHS:
+        return ARCHS[name]
+    if name in (PAPER_CNN.name, "paper_cnn"):
+        return PAPER_CNN  # type: ignore[return-value]
+    raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)} + ['paper-cnn']")
+
+
+__all__ = [
+    "ArchConfig",
+    "LayerSpec",
+    "ShapeConfig",
+    "ARCHS",
+    "PAPER_CNN",
+    "LM_SHAPES",
+    "SHAPES_BY_NAME",
+    "TRAIN_4K",
+    "PREFILL_32K",
+    "DECODE_32K",
+    "LONG_500K",
+    "get_config",
+    "reduced",
+    "shape_applicable",
+]

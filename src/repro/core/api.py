@@ -1,0 +1,72 @@
+"""High-level Explainer API — the paper's algorithm as a one-call feature.
+
+    explainer = Explainer(f, method="paper", n_int=4, m=64)
+    result = explainer.attribute(x, baseline, target)
+
+``f(xs, targets) -> (N,)`` is any differentiable scalar model output
+(classifier probability, LM next-token log-prob, ...).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ig, probes, schedule
+from repro.core.ig import IGResult
+from repro.core.probes import ScalarFn
+from repro.core.schedule import Schedule
+
+
+@dataclass
+class Explainer:
+    f: ScalarFn
+    method: str = "paper"  # uniform | paper | warp | gauss | refine
+    m: int = 64  # total interpolation steps
+    n_int: int = 4  # stage-1 intervals (paper sweeps 2..8)
+    refine_rounds: int = 4  # for method == "refine"
+    power: float = 0.5  # sqrt attenuation (paper); 1.0 = linear
+    min_steps: int = 1
+    rule: str = "midpoint"  # uniform-rule variant
+    chunk: int = 0  # stage-2 step chunk (0 = all at once)
+    interp_fn: Callable = None  # optional Pallas kernel injection
+    accum_fn: Callable = None
+
+    def build_schedule(
+        self, x: jax.Array, baseline: jax.Array, target: jax.Array
+    ) -> Schedule:
+        """Stage 1 (probe) + step allocation. Probe cost: n_int+1 forwards."""
+        if self.method == "uniform":
+            return schedule.uniform(self.m, self.rule)
+        if self.method == "refine":
+            b, v = probes.refined_boundaries(
+                self.f, x, baseline, target, self.n_int, self.refine_rounds
+            )
+            return schedule.from_boundaries(b, v, self.m, power=self.power)
+        vals = probes.boundary_values(self.f, x, baseline, target, self.n_int)
+        if self.method == "paper":
+            return schedule.paper(vals, self.m, power=self.power, min_steps=self.min_steps)
+        if self.method == "warp":
+            return schedule.warp(vals, self.m, power=self.power)
+        if self.method == "gauss":
+            return schedule.gauss(vals, self.m, power=self.power)
+        raise ValueError(f"unknown method {self.method!r}")
+
+    def attribute(
+        self, x: jax.Array, baseline: jax.Array, target: jax.Array
+    ) -> IGResult:
+        sched = self.build_schedule(x, baseline, target)
+        kw = {}
+        if self.interp_fn is not None:
+            kw["interp_fn"] = self.interp_fn
+        if self.accum_fn is not None:
+            kw["accum_fn"] = self.accum_fn
+        return ig.attribute(
+            self.f, x, baseline, sched, target, chunk=self.chunk, **kw
+        )
+
+    def jitted(self) -> Callable:
+        """One compiled end-to-end (stage1 + stage2) explanation step."""
+        return jax.jit(self.attribute)

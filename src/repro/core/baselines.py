@@ -1,0 +1,36 @@
+"""IG baselines — the notion of 'missingness' (paper §II).
+
+Vision: black / white / noise images. Token models: zero or pad-token
+embeddings (interpolation happens in embedding space — tokens are discrete).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def black(x: jax.Array) -> jax.Array:
+    return jnp.zeros_like(x)
+
+
+def white(x: jax.Array, value: float = 1.0) -> jax.Array:
+    return jnp.full_like(x, value)
+
+
+def gaussian(x: jax.Array, key: jax.Array, sigma: float = 1.0) -> jax.Array:
+    return (jax.random.normal(key, x.shape) * sigma).astype(x.dtype)
+
+
+def pad_embedding(embed_table: jax.Array, x_embeds: jax.Array, pad_id: int = 0) -> jax.Array:
+    """Baseline for token models: every position = the pad-token embedding."""
+    pad = embed_table[pad_id].astype(x_embeds.dtype)
+    return jnp.broadcast_to(pad, x_embeds.shape)
+
+
+BASELINES = {"black": black, "white": white}
+
+
+def get(name: str):
+    if name not in BASELINES:
+        raise KeyError(f"unknown baseline {name!r}; known: {sorted(BASELINES)}")
+    return BASELINES[name]

@@ -1,0 +1,58 @@
+"""Attribution quality metrics.
+
+convergence_delta — the paper's δ (Eq. 3, completeness gap): the *only*
+metric the paper tunes against; iso-convergence = equal δ.
+
+insertion/deletion AUC — beyond-paper sanity metric for heatmap quality
+(higher insertion AUC / lower deletion AUC = better ordering of features).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.probes import ScalarFn
+
+
+def convergence_delta(
+    attributions: jax.Array, f_x: jax.Array, f_baseline: jax.Array
+) -> jax.Array:
+    """δ = |Σ_i φ_i − (f(x) − f(x'))|  per example (Eq. 3)."""
+    B = attributions.shape[0]
+    return jnp.abs(attributions.reshape(B, -1).sum(-1) - (f_x - f_baseline))
+
+
+def completeness_satisfied(delta: jax.Array, tol: float) -> jax.Array:
+    return delta <= tol
+
+
+def insertion_deletion_auc(
+    f: ScalarFn,
+    x: jax.Array,
+    baseline: jax.Array,
+    attributions: jax.Array,
+    target: jax.Array,
+    steps: int = 16,
+) -> tuple[jax.Array, jax.Array]:
+    """Insert (resp. delete) features in decreasing-attribution order and
+    trace f; returns (insertion_auc, deletion_auc), each (B,)."""
+    B = x.shape[0]
+    flat_x = x.reshape(B, -1)
+    flat_b = baseline.reshape(B, -1)
+    order = jnp.argsort(-attributions.reshape(B, -1), axis=-1)
+    n = flat_x.shape[-1]
+    rank = jnp.argsort(order, axis=-1)  # rank of each feature
+
+    def curve(start_from_baseline: bool):
+        def at_frac(i):
+            kth = (i / steps) * n
+            mask = (rank < kth).astype(x.dtype)  # top-k features "on"
+            xs = jnp.where(
+                mask > 0, flat_x, flat_b) if start_from_baseline else jnp.where(
+                mask > 0, flat_b, flat_x)
+            return f(xs.reshape(x.shape), target)
+
+        vals = jnp.stack([at_frac(i) for i in range(steps + 1)])  # (steps+1, B)
+        return jnp.trapezoid(vals, axis=0) / steps
+
+    return curve(True), curve(False)

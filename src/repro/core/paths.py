@@ -1,0 +1,29 @@
+"""Straight-line IG path (Eq. 1): x(α) = x' + α (x - x')."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def interpolate(x: jax.Array, baseline: jax.Array, alphas: jax.Array) -> jax.Array:
+    """Batch of interpolants along the straight-line path.
+
+    x, baseline: (B, *F);  alphas: (K,) or (B, K)  ->  (B, K, *F).
+
+    This is the pure-jnp oracle for the ``repro.kernels.interpolate`` Pallas
+    kernel (which fuses the broadcast to avoid K× HBM reads of x, x').
+    """
+    nf = x.ndim - 1
+    if alphas.ndim == 1:
+        a = alphas.reshape((1, -1) + (1,) * nf)
+    else:
+        a = alphas.reshape(alphas.shape + (1,) * nf)
+    xe = x[:, None]
+    be = baseline[:, None]
+    return (be + a.astype(x.dtype) * (xe - be)).astype(x.dtype)
+
+
+def at_alpha(x: jax.Array, baseline: jax.Array, alpha: jax.Array) -> jax.Array:
+    """Single path point; alpha: () or (B,)."""
+    a = alpha.reshape((-1,) + (1,) * (x.ndim - 1)) if alpha.ndim else alpha
+    return (baseline + a.astype(x.dtype) * (x - baseline)).astype(x.dtype)

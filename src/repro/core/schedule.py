@@ -1,0 +1,247 @@
+"""Interpolation schedules — the paper's contribution lives here.
+
+A *schedule* is a pair ``(alphas[m], weights[m])`` approximating
+``∫_0^1 g(α) dα ≈ Σ_k w_k g(α_k)``. Schedules are **data, not shapes**: the
+same compiled stage-2 executable serves any allocation (the TPU-native
+re-design of the paper's per-image dynamic step distribution; DESIGN.md §2).
+
+Schedules:
+  uniform        — baseline IG (left/right/midpoint/trapezoid Riemann)
+  paper          — faithful NUIG: n_int equal intervals, integer step counts
+                   ∝ sqrt(|Δf|) (largest-remainder rounding), uniform-in-interval
+  warp           — beyond-paper: continuous inverse-CDF limit of `paper`
+  gauss          — beyond-paper: Gauss–Legendre nodes in the warped domain
+All functions are jit-compatible and batched over examples where noted.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Schedule(NamedTuple):
+    alphas: jax.Array  # (m,) or (B, m) — path positions in [0, 1]
+    weights: jax.Array  # same shape — Riemann/quadrature weights, sum == 1
+
+
+# ----------------------------------------------------------------- uniform
+
+
+def uniform(m: int, rule: str = "midpoint") -> Schedule:
+    """Baseline IG discretization (paper Eq. 2 uses the 'right'/'left' form)."""
+    if rule == "midpoint":
+        a = (jnp.arange(m) + 0.5) / m
+        w = jnp.full((m,), 1.0 / m)
+    elif rule == "left":
+        a = jnp.arange(m) / m
+        w = jnp.full((m,), 1.0 / m)
+    elif rule == "right":
+        a = jnp.arange(1, m + 1) / m
+        w = jnp.full((m,), 1.0 / m)
+    elif rule == "trapezoid":
+        a = jnp.arange(m) / max(m - 1, 1)
+        w = jnp.full((m,), 1.0 / max(m - 1, 1))
+        w = w.at[0].mul(0.5).at[-1].mul(0.5)
+    else:
+        raise ValueError(f"unknown rule {rule!r}")
+    return Schedule(a.astype(jnp.float32), w.astype(jnp.float32))
+
+
+# ------------------------------------------------- paper step allocation
+
+
+def normalized_deltas(boundary_vals: jax.Array, power: float = 0.5) -> jax.Array:
+    """|Δf| per interval -> importance density, normalized to sum 1.
+
+    boundary_vals: (..., n_int+1) stage-1 probe outputs f(x(α_i)).
+    ``power=0.5`` is the paper's sqrt attenuation (§III Algorithm).
+    """
+    d = jnp.abs(jnp.diff(boundary_vals, axis=-1))  # (..., n_int)
+    d = d ** power
+    # flat-region fallback: if all deltas vanish, fall back to uniform
+    s = d.sum(-1, keepdims=True)
+    n = d.shape[-1]
+    return jnp.where(s > 1e-12, d / jnp.maximum(s, 1e-12), 1.0 / n)
+
+
+def allocate_steps(importance: jax.Array, m: int, min_steps: int = 1) -> jax.Array:
+    """Integer largest-remainder allocation of m steps ∝ importance.
+
+    importance: (..., n_int) normalized;  returns int32 (..., n_int), sum == m.
+    ``min_steps`` guards the paper's n_int>8 pathology (starved intervals).
+    """
+    n = importance.shape[-1]
+    assert m >= n * min_steps, (m, n, min_steps)
+    budget = m - n * min_steps
+    q = importance * budget
+    base = jnp.floor(q).astype(jnp.int32)
+    rem = q - base
+    short = budget - base.sum(-1, keepdims=True)  # how many +1s to hand out
+    # rank remainders descending; slots with rank < short get +1
+    order = jnp.argsort(-rem, axis=-1)
+    rank = jnp.argsort(order, axis=-1)
+    bonus = (rank < short).astype(jnp.int32)
+    return base + bonus + min_steps
+
+
+def from_allocation(
+    alloc: jax.Array, m: int, lo: float = 0.0, hi: float = 1.0, rule: str = "midpoint"
+) -> Schedule:
+    """Uniform-in-interval schedule from integer per-interval step counts.
+
+    alloc: (..., n_int) int32 summing to m. Fully static-shape: step k is
+    mapped to its interval by a searchsorted-style comparison — the gather
+    trick that makes the paper's dynamic allocation compile once on TPU.
+    """
+    n = alloc.shape[-1]
+    csum = jnp.cumsum(alloc, axis=-1)  # (..., n)
+    k = jnp.arange(m)  # (m,)
+    # interval of step k: first i with csum[i] > k
+    iv = (k[..., None, :] >= csum[..., :, None]).sum(-2)  # (..., m) int
+    starts = csum - alloc  # first step index of each interval
+    take = lambda t: jnp.take_along_axis(t, iv, axis=-1)
+    m_i = take(alloc)  # steps in k's interval
+    r = k - take(starts)  # rank of k within its interval
+    width = (hi - lo) / n
+    off = {"midpoint": 0.5, "left": 0.0, "right": 1.0}[rule]
+    a = lo + (iv + (r + off) / m_i) * width
+    w = width / m_i
+    return Schedule(a.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def paper(
+    boundary_vals: jax.Array,
+    m: int,
+    *,
+    power: float = 0.5,
+    min_steps: int = 1,
+    rule: str = "midpoint",
+) -> Schedule:
+    """Faithful NUIG schedule from stage-1 probe values (paper §III)."""
+    imp = normalized_deltas(boundary_vals, power)
+    alloc = allocate_steps(imp, m, min_steps)
+    return from_allocation(alloc, m, rule=rule)
+
+
+# ----------------------------------------------------------- warp (beyond)
+
+
+def warp(boundary_vals: jax.Array, m: int, *, power: float = 0.5) -> Schedule:
+    """Continuous limit of `paper`: α_k = G⁻¹((k+½)/m) with piecewise-linear
+    CDF G whose density on interval i is ∝ |Δf_i|^power.
+
+    Removes integer-rounding pathologies (the paper's n_int>8 regression) and
+    keeps weights piecewise-constant-in-interval — so it IS the paper's scheme
+    with fractional step counts.
+
+    A density floor (blend with uniform, λ = n/m) is the continuous analogue
+    of the paper's ``min_steps=1``: it guarantees every interval's CDF span
+    is ≥ 1/m, hence receives ≥ 1 of the m grid points, hence Σw == 1 exactly
+    (a zero-density interval would otherwise be silently dropped from the
+    quadrature — unbounded error if f moves there).
+    """
+    imp = normalized_deltas(boundary_vals, power)  # (..., n)
+    n = imp.shape[-1]
+    lam = min(1.0, n / m)
+    imp = (1.0 - lam) * imp + lam / n
+    cdf = jnp.cumsum(imp, axis=-1)  # G at right boundaries
+    t = (jnp.arange(m) + 0.5) / m  # (m,)
+    iv = (t[..., None, :] >= cdf[..., :, None]).sum(-2)  # (..., m)
+    iv = jnp.clip(iv, 0, n - 1)
+    take = lambda v: jnp.take_along_axis(v, iv, axis=-1)
+    left_cdf = take(cdf - imp)
+    dens = take(imp)  # mass of k's interval
+    frac = (t - left_cdf) / jnp.maximum(dens, 1e-12)
+    a = (iv + frac) / n  # sorted inverse-CDF nodes
+    # Voronoi-cell weights: w_k = (midpoint to next node) − (midpoint to
+    # previous node), with 0/1 at the ends. Telescopes to Σw == 1 exactly and
+    # is second-order on smooth integrands — per-interval-uniform weights at
+    # non-midpoint nodes would degrade to O(1/m).
+    mid = 0.5 * (a[..., 1:] + a[..., :-1])
+    lo = jnp.concatenate([jnp.zeros_like(a[..., :1]), mid], axis=-1)
+    hi = jnp.concatenate([mid, jnp.ones_like(a[..., :1])], axis=-1)
+    w = hi - lo
+    return Schedule(a.astype(jnp.float32), w.astype(jnp.float32))
+
+
+# ---------------------------------------------------------- gauss (beyond)
+
+
+def _gauss_legendre(m: int) -> tuple[np.ndarray, np.ndarray]:
+    x, w = np.polynomial.legendre.leggauss(m)  # nodes on [-1,1]
+    return (x + 1.0) / 2.0, w / 2.0  # map to [0,1]
+
+
+def gauss(
+    boundary_vals: jax.Array, m: int, *, power: float = 0.5, order: int = 8
+) -> Schedule:
+    """Composite Gauss–Legendre in the importance-allocated intervals.
+
+    m steps = (m/order) Gauss cells of fixed ``order``; cells are distributed
+    across intervals ∝ |Δf|^power (largest remainder, ≥1), sub-cells are equal
+    within an interval. A *global* Gauss rule would lose its order at the
+    piecewise-linear warp kinks; the composite rule is exact per smooth piece
+    (degree 2·order−1). Beyond-paper.
+    """
+    imp = normalized_deltas(boundary_vals, power)
+    n = imp.shape[-1]
+    # shrink order if needed so every interval can get >= 1 cell
+    order = min(order, m // n)
+    while m % order:
+        order -= 1
+    assert order >= 1, (m, n)
+    cells = m // order
+    nodes, gw = _gauss_legendre(order)  # static, tiny
+    alloc = allocate_steps(imp, cells, min_steps=1)  # cells per interval
+    csum = jnp.cumsum(alloc, axis=-1)
+    k = jnp.arange(m)
+    cell = k // order
+    node = k % order
+    iv = (cell[..., None, :] >= csum[..., :, None]).sum(-2)  # (..., m)
+    starts = csum - alloc
+    take = lambda t_: jnp.take_along_axis(t_, iv, axis=-1)
+    cells_i = take(alloc)
+    r = cell - take(starts)  # sub-cell rank within interval
+    width = 1.0 / n
+    sub = width / cells_i
+    a = (iv * width) + (r + jnp.asarray(nodes, jnp.float32)[node]) * sub
+    w = jnp.asarray(gw, jnp.float32)[node] * sub
+    return Schedule(a.astype(jnp.float32), w.astype(jnp.float32))
+
+
+# ------------------------------------------- refined boundaries (beyond)
+
+
+def from_boundaries(
+    bounds: jax.Array, vals: jax.Array, m: int, *, power: float = 0.5
+) -> Schedule:
+    """Schedule over *non-uniform* interval boundaries (secant-refine stage 1).
+
+    bounds/vals: (..., K) sorted probe positions and f values; zero-width
+    (padding) intervals receive zero importance and zero steps.
+    """
+    widths = jnp.diff(bounds, axis=-1)  # (..., n)
+    d = jnp.abs(jnp.diff(vals, axis=-1)) ** power
+    d = jnp.where(widths > 1e-9, d, 0.0)
+    s = d.sum(-1, keepdims=True)
+    live = (widths > 1e-9).astype(jnp.float32)
+    imp = jnp.where(s > 1e-12, d / jnp.maximum(s, 1e-12), live / jnp.maximum(live.sum(-1, keepdims=True), 1))
+    alloc = allocate_steps(imp, m, min_steps=0)
+    csum = jnp.cumsum(alloc, axis=-1)
+    k = jnp.arange(m)
+    iv = (k[..., None, :] >= csum[..., :, None]).sum(-2)
+    starts = csum - alloc
+    take = lambda t: jnp.take_along_axis(t, iv, axis=-1)
+    m_i = jnp.maximum(take(alloc), 1)
+    r = k - take(starts)
+    left = take(bounds[..., :-1])
+    w_int = take(widths)
+    a = left + (r + 0.5) / m_i * w_int
+    w = w_int / m_i
+    return Schedule(a.astype(jnp.float32), w.astype(jnp.float32))
+
+
+SCHEDULES = {"uniform": uniform, "paper": paper, "warp": warp, "gauss": gauss}

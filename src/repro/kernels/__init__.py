@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical hot spots.
+
+Each kernel ships as kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper) and ref.py (pure-jnp oracle). On this CPU container kernels run with
+interpret=True; on TPU set interpret=False.
+"""
+from repro.kernels.interpolate.ops import interpolate
+from repro.kernels.ig_accum.ops import ig_accum
+from repro.kernels.flash_attention.ops import flash_attention
+
+__all__ = ["interpolate", "ig_accum", "flash_attention"]

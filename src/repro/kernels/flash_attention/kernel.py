@@ -1,0 +1,99 @@
+"""Flash attention (GQA, causal) — Pallas TPU kernel.
+
+TPU adaptation of the classic GPU algorithm: Q/K/V tiles are staged in VMEM
+via BlockSpecs, the score tile hits the MXU (block sizes multiples of 128),
+and the online-softmax running state (m, l, acc) lives in VMEM scratch across
+the innermost (sequential) K-block grid dimension — replacing the GPU's
+shared-memory/warp-register carries.
+
+Grid: (B, NQ, Sq/bq, Sk/bk), K innermost. GQA: the K/V BlockSpec index-maps
+query head h -> kv head h // G, so KV tiles are fetched once per group.
+NOTE: fully-masked (future) K blocks are skipped via pl.when on the block
+index — with a causal grid this removes ~half the MXU work.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, causal, bq, bk, scale):
+    ki = pl.program_id(3)
+    qi = pl.program_id(2)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # skip K blocks strictly in the future of this whole Q block
+    @pl.when((ki * bk <= qi * bq + bq - 1) if causal else (ki >= 0))
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale  # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)  # (bk, D)
+        s = q @ k.T  # (bq, bk) — MXU
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + p @ v
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret")
+)
+def flash_attention_pallas(
+    q: jax.Array,  # (B, NQ, Sq, D)
+    k: jax.Array,  # (B, NKV, Sk, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    B, NQ, Sq, D = q.shape
+    NKV, Sk = k.shape[1], k.shape[2]
+    G = NQ // NKV
+    bq, bk = min(block_q, Sq), min(block_k, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
+    grid = (B, NQ, Sq // bq, Sk // bk)
+    kernel = functools.partial(
+        _flash_kernel, causal=causal, bq=bq, bk=bk, scale=D**-0.5
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, iq, ik: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, iq, ik: (b, h // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, NQ, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),  # running max m
+            pltpu.VMEM((bq,), jnp.float32),  # running denom l
+            pltpu.VMEM((bq, D), jnp.float32),  # running output acc
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,30 @@
+"""jit'd wrapper: (B, S, H, D) model layout -> kernel layout + fallbacks."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def flash_attention(
+    q: jax.Array,  # (B, S, NQ, D) — model layout
+    k: jax.Array,  # (B, S, NKV, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    o = flash_attention_pallas(
+        qt, kt, vt, causal=causal, block_q=block_q, block_k=block_k, interpret=interpret
+    )
+    return o.transpose(0, 2, 1, 3)
+
+
+__all__ = ["flash_attention", "attention_ref"]

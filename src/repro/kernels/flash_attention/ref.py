@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the flash attention kernel (GQA, causal)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,  # (B, NQ, Sq, D)
+    k: jax.Array,  # (B, NKV, Sk, D)
+    v: jax.Array,  # (B, NKV, Sk, D)
+    *,
+    causal: bool = True,
+) -> jax.Array:
+    B, NQ, Sq, D = q.shape
+    NKV, Sk = k.shape[1], k.shape[2]
+    G = NQ // NKV
+    qg = q.reshape(B, NKV, G, Sq, D).astype(jnp.float32) * (D**-0.5)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k.astype(jnp.float32))
+    if causal:
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask, s, -1e30)
+    a = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", a, v.astype(jnp.float32))
+    return o.reshape(B, NQ, Sq, D).astype(q.dtype)

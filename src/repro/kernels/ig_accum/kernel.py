@@ -1,0 +1,58 @@
+"""Fused weighted Riemann-sum accumulation: acc += Σ_k w_k · g_k.
+
+The non-uniform interval widths ride in w — stage 2 of the paper is exactly
+this reduction. Fusing keeps the running attribution tile resident in VMEM
+across the K (steps) grid dimension instead of K× read-modify-write round
+trips to HBM (memory-bound op: 1 output write per K-tile instead of K).
+
+Grid: (B, F/Ft, K/Kt) — K is the innermost (sequential) dimension so the
+output tile is revisited with carry semantics; f32 accumulation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _accum_kernel(acc_ref, g_ref, w_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = acc_ref[...].astype(jnp.float32)
+
+    g = g_ref[...].astype(jnp.float32)  # (1, Kt, Ft)
+    w = w_ref[...].astype(jnp.float32)  # (1, Kt)
+    o_ref[...] += jnp.sum(g * w[..., None], axis=1)  # (1, Ft)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "block_f", "interpret"))
+def ig_accum_pallas(
+    acc: jax.Array,
+    grads: jax.Array,
+    weights: jax.Array,
+    *,
+    block_k: int = 8,
+    block_f: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """acc (B, F) f32; grads (B, K, F); weights (B, K) -> (B, F) f32."""
+    B, K, F = grads.shape
+    bk, bf = min(block_k, K), min(block_f, F)
+    assert K % bk == 0 and F % bf == 0, (K, bk, F, bf)
+    grid = (B, F // bf, K // bk)
+    return pl.pallas_call(
+        _accum_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bf), lambda b, f, k: (b, f)),
+            pl.BlockSpec((1, bk, bf), lambda b, f, k: (b, k, f)),
+            pl.BlockSpec((1, bk), lambda b, f, k: (b, k)),
+        ],
+        out_specs=pl.BlockSpec((1, bf), lambda b, f, k: (b, f)),
+        out_shape=jax.ShapeDtypeStruct((B, F), jnp.float32),
+        interpret=interpret,
+    )(acc, grads, weights)

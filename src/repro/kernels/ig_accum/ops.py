@@ -1,0 +1,45 @@
+"""jit'd public wrapper + engine adapter for the accumulation kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ig_accum.kernel import ig_accum_pallas
+from repro.kernels.ig_accum.ref import ig_accum_ref
+
+
+def ig_accum(
+    acc: jax.Array,
+    grads: jax.Array,
+    weights: jax.Array,
+    *,
+    block_k: int = 8,
+    block_f: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """Engine-compatible drop-in for the default accumulator.
+
+    acc: (B, *F) f32; grads: (B, K, *F); weights: (B, K) -> (B, *F) f32.
+    """
+    B = acc.shape[0]
+    feat = acc.shape[1:]
+    F = int(np.prod(feat))
+    K = grads.shape[1]
+    pad_f = (-F) % block_f
+    pad_k = (-K) % block_k
+    af = jnp.pad(acc.reshape(B, F), ((0, 0), (0, pad_f)))
+    gf = jnp.pad(grads.reshape(B, K, F), ((0, 0), (0, pad_k), (0, pad_f)))
+    wf = jnp.pad(weights, ((0, 0), (0, pad_k)))
+    out = ig_accum_pallas(
+        af,
+        gf,
+        wf,
+        block_k=min(block_k, K + pad_k),
+        block_f=min(block_f, F + pad_f),
+        interpret=interpret,
+    )
+    return out[:, :F].reshape((B,) + feat)
+
+
+__all__ = ["ig_accum", "ig_accum_ref"]

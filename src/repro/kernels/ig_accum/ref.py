@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the weighted Riemann accumulation kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ig_accum_ref(acc: jax.Array, grads: jax.Array, weights: jax.Array) -> jax.Array:
+    """acc: (B, F) f32; grads: (B, K, F); weights: (B, K) -> (B, F) f32.
+
+    out[b, f] = acc[b, f] + Σ_k weights[b, k] * grads[b, k, f]
+    """
+    return acc + jnp.einsum(
+        "bkf,bk->bf", grads.astype(jnp.float32), weights.astype(jnp.float32)
+    )

@@ -1,0 +1,54 @@
+"""jit'd public wrapper: arbitrary feature shape + padding + engine adapter."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.interpolate.kernel import interpolate_pallas
+from repro.kernels.interpolate.ref import interpolate_ref
+
+
+def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def interpolate(
+    x: jax.Array,
+    baseline: jax.Array,
+    alphas: jax.Array,
+    *,
+    block_k: int = 8,
+    block_f: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """Engine-compatible drop-in for ``repro.core.paths.interpolate``.
+
+    x, baseline: (B, *F); alphas: (K,) or (B, K) -> (B, K, *F).
+    """
+    B = x.shape[0]
+    feat = x.shape[1:]
+    F = int(np.prod(feat))
+    if alphas.ndim == 1:
+        alphas = jnp.broadcast_to(alphas, (B,) + alphas.shape)
+    K = alphas.shape[1]
+    xf = _pad_to(x.reshape(B, F), block_f, 1)
+    bf = _pad_to(baseline.reshape(B, F), block_f, 1)
+    af = _pad_to(alphas, block_k, 1)
+    bk = min(block_k, af.shape[1])
+    blf = min(block_f, xf.shape[1])
+    out = interpolate_pallas(
+        xf, bf, af.astype(jnp.float32), block_k=bk, block_f=blf, interpret=interpret
+    )
+    return out[:, :K, :F].reshape((B, K) + feat)
+
+
+__all__ = ["interpolate", "interpolate_ref"]

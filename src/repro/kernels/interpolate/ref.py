@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the fused interpolation kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def interpolate_ref(x: jax.Array, baseline: jax.Array, alphas: jax.Array) -> jax.Array:
+    """x, baseline: (B, F);  alphas: (B, K)  ->  (B, K, F).
+
+    out[b, k, f] = baseline[b, f] + alphas[b, k] * (x[b, f] - baseline[b, f])
+    """
+    a = alphas[..., None].astype(jnp.float32)
+    xe = x[:, None].astype(jnp.float32)
+    be = baseline[:, None].astype(jnp.float32)
+    return (be + a * (xe - be)).astype(x.dtype)

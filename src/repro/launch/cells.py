@@ -1,0 +1,228 @@
+"""Dry-run cell construction: (arch × shape × mesh) -> lowerable step.
+
+One *cell* = the jit-able step function, ShapeDtypeStruct arguments, and
+in/out shardings for one (architecture, input-shape) pair on a mesh:
+
+    train_*    -> train_step(state, batch)      [FSDP+TP rules]
+    prefill_*  -> prefill_step(params, batch)   [FSDP+TP rules]
+    decode_*   -> serve_step(params, cache, tok)[FSDP+TP; long_*: +SP]
+
+KV-head TP note: GQA configs with kv_heads < model-axis size get their decode
+cache expanded to ``kv_slots = model_size`` head slots (``attn.expand_kv``)
+so the cache head axis shards on 'model' — 4x less per-device KV than
+replication for kv=4 configs (see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig, shape_applicable
+from repro.models import lm
+from repro.models.registry import Model, input_specs
+from repro.optim import OptState
+from repro.serve.engine import make_prefill_step, make_serve_step
+from repro.sharding import (
+    FSDP_RULES,
+    MeshRules,
+    cache_specs,
+    param_specs,
+    spec_for_batch_tree,
+    to_shardings,
+    train_state_specs,
+)
+from repro.train.step import TrainConfig, abstract_train_state, make_train_step
+
+
+@dataclass
+class Cell:
+    name: str
+    fn: Callable
+    args: tuple  # ShapeDtypeStruct pytrees
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple[int, ...]
+    mesh: Optional[Mesh] = None  # for activation sharding constraints
+    seq_sharded: bool = False
+
+
+def _mesh_size(mesh: Mesh, axis: str) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes.get(axis, 1)
+
+
+def choose_kv_slots(cfg: ArchConfig, mesh: Mesh, *, seq_sharded: bool) -> int:
+    """Expand KV heads to the model-axis size for TP-sharded caches."""
+    if seq_sharded or not cfg.num_kv_heads:
+        return 0
+    model = _mesh_size(mesh, "model")
+    if 0 < cfg.num_kv_heads < model and model % cfg.num_kv_heads == 0:
+        return model
+    return 0
+
+
+def build_train_cell(
+    cfg: ArchConfig,
+    shape: ShapeConfig,
+    mesh: Mesh,
+    *,
+    rules: MeshRules = FSDP_RULES,
+    microbatches: int = 8,
+    remat: bool = True,
+    grad_compression: bool = False,
+) -> Cell:
+    tcfg = TrainConfig(microbatches=microbatches, remat=remat, grad_compression=grad_compression)
+    state = abstract_train_state(cfg, tcfg)
+    batch = input_specs(cfg, shape)
+    defs = lm.param_defs(cfg)
+
+    state_specs = train_state_specs(defs, mesh, rules, state)
+    batch_specs = spec_for_batch_tree(batch, mesh, rules)
+    metrics_specs = {"loss": P(), "grad_norm": P(), "lr": P()}
+
+    return Cell(
+        name=f"{cfg.name}:{shape.name}",
+        fn=make_train_step(cfg, tcfg),
+        args=(state, batch),
+        in_shardings=(
+            to_shardings(state_specs, mesh),
+            to_shardings(batch_specs, mesh),
+        ),
+        out_shardings=(
+            to_shardings(state_specs, mesh),
+            to_shardings(metrics_specs, mesh),
+        ),
+        donate_argnums=(0,),
+        mesh=mesh,
+    )
+
+
+def _cast_abstract(params, dtype):
+    """ShapeDtypeStruct tree with floating leaves re-typed (serving dtype)."""
+    import numpy as np
+
+    def one(p):
+        if np.issubdtype(p.dtype, np.floating):
+            return jax.ShapeDtypeStruct(p.shape, jnp.dtype(dtype))
+        return p
+
+    return jax.tree.map(one, params)
+
+
+def build_prefill_cell(
+    cfg: ArchConfig,
+    shape: ShapeConfig,
+    mesh: Mesh,
+    *,
+    rules: MeshRules = FSDP_RULES,
+    serve_dtype: str = "bfloat16",  # production serving default (§Perf #4)
+) -> Cell:
+    kv_slots = choose_kv_slots(cfg, mesh, seq_sharded=False)
+    batch = input_specs(cfg, shape)
+    defs = lm.param_defs(cfg)
+    params = _cast_abstract(lm.abstract_params(cfg), serve_dtype)
+    fn = make_prefill_step(cfg, max_len=shape.seq_len, kv_slots=kv_slots)
+
+    # abstract outputs for sharding trees
+    logits_cache = jax.eval_shape(fn, params, batch)
+    _, cache_abs = logits_cache
+
+    p_specs = param_specs(defs, mesh, rules)
+    batch_specs = spec_for_batch_tree(batch, mesh, rules)
+    c_specs = cache_specs(cache_abs, mesh, rules)
+    b = batch_specs["tokens"][0] if "tokens" in batch_specs else None
+    logits_spec = P(b, None, "model" if cfg.vocab_size % _mesh_size(mesh, "model") == 0 else None)
+
+    return Cell(
+        name=f"{cfg.name}:{shape.name}",
+        fn=fn,
+        args=(params, batch),
+        in_shardings=(to_shardings(p_specs, mesh), to_shardings(batch_specs, mesh)),
+        out_shardings=(
+            NamedSharding(mesh, logits_spec),
+            to_shardings(c_specs, mesh),
+        ),
+        donate_argnums=(),
+        mesh=mesh,
+    )
+
+
+def build_decode_cell(
+    cfg: ArchConfig,
+    shape: ShapeConfig,
+    mesh: Mesh,
+    *,
+    rules: MeshRules = FSDP_RULES,
+    serve_dtype: str = "bfloat16",  # production serving default (§Perf #4)
+) -> Cell:
+    seq_sharded = shape.global_batch < _mesh_size(mesh, "data")  # long_500k
+    kv_slots = choose_kv_slots(cfg, mesh, seq_sharded=seq_sharded)
+    spec = input_specs(cfg, shape, kv_slots=kv_slots)
+    token, cache = spec["token"], spec["cache"]
+    defs = lm.param_defs(cfg)
+    params = _cast_abstract(lm.abstract_params(cfg), serve_dtype)
+    fn = make_serve_step(cfg)
+
+    p_specs = param_specs(defs, mesh, rules)
+    c_specs = cache_specs(cache, mesh, rules, seq_sharded=seq_sharded)
+    tok_spec = spec_for_batch_tree(token, mesh, rules)
+
+    return Cell(
+        name=f"{cfg.name}:{shape.name}",
+        fn=fn,
+        args=(params, cache, token),
+        in_shardings=(
+            to_shardings(p_specs, mesh),
+            to_shardings(c_specs, mesh),
+            to_shardings(tok_spec, mesh),
+        ),
+        out_shardings=(
+            to_shardings(tok_spec, mesh),
+            to_shardings(c_specs, mesh),
+        ),
+        donate_argnums=(1,),
+        mesh=mesh,
+        seq_sharded=seq_sharded,
+    )
+
+
+def build_cell(
+    cfg: ArchConfig,
+    shape: ShapeConfig,
+    mesh: Mesh,
+    **kw,
+) -> Optional[Cell]:
+    """Returns None (with reason recorded by the caller) for skipped cells."""
+    ok, _reason = shape_applicable(cfg, shape)
+    if not ok:
+        return None
+    if shape.kind == "train":
+        return build_train_cell(cfg, shape, mesh, **kw)
+    if shape.kind == "prefill":
+        return build_prefill_cell(cfg, shape, mesh, **kw)
+    return build_decode_cell(cfg, shape, mesh, **kw)
+
+
+def lower_cell(cell: Cell):
+    """jit + lower (no compile). The caller compiles and inspects.
+
+    Tracing runs under the activation-sharding policy so the model's
+    ``constrain`` calls pin intermediate layouts (see sharding/context.py).
+    """
+    from repro.sharding.context import activation_sharding
+
+    jitted = jax.jit(
+        cell.fn,
+        in_shardings=cell.in_shardings,
+        out_shardings=cell.out_shardings,
+        donate_argnums=cell.donate_argnums,
+    )
+    if cell.mesh is not None:
+        with activation_sharding(cell.mesh, seq_sharded=cell.seq_sharded):
+            return jitted.lower(*cell.args)
+    return jitted.lower(*cell.args)

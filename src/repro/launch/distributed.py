@@ -1,0 +1,60 @@
+"""Multi-host runtime initialization for real TPU pods.
+
+On a v5e pod each host sees 4 local chips; ``init_distributed()`` wires
+jax.distributed so ``jax.devices()`` is the global 256/512-chip view the
+meshes in ``mesh.py`` expect. On this CPU container it is a no-op (single
+process) — the dry-run emulates the device count with XLA_FLAGS instead.
+
+Launch contract (see launch/run_pod.sh):
+  COORDINATOR_ADDR host:port of process 0
+  NUM_PROCESSES    total host count (pod: 64, 2 pods: 128)
+  PROCESS_ID       this host's index
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+
+def init_distributed() -> dict:
+    """Initialize jax.distributed from env; returns a summary dict."""
+    addr = os.environ.get("COORDINATOR_ADDR")
+    num = int(os.environ.get("NUM_PROCESSES", "1"))
+    pid = int(os.environ.get("PROCESS_ID", "0"))
+    if addr and num > 1:
+        jax.distributed.initialize(
+            coordinator_address=addr, num_processes=num, process_id=pid
+        )
+    return {
+        "process_index": jax.process_index(),
+        "process_count": jax.process_count(),
+        "local_devices": jax.local_device_count(),
+        "global_devices": jax.device_count(),
+    }
+
+
+def global_batch_from_process(global_batch: int) -> tuple[int, int]:
+    """(local_batch, offset) for this host's slice of the data pipeline."""
+    n, i = jax.process_count(), jax.process_index()
+    assert global_batch % n == 0, (global_batch, n)
+    local = global_batch // n
+    return local, i * local
+
+
+def assemble_global(mesh, specs, host_arrays):
+    """Build global jax.Arrays from per-host numpy slices (input path).
+
+    host_arrays: pytree of per-host numpy arrays (the local slice along
+    batch). Uses ``jax.make_array_from_process_local_data`` so each host
+    only materializes its shard.
+    """
+    from jax.sharding import NamedSharding
+
+    def one(spec, arr):
+        return jax.make_array_from_process_local_data(
+            NamedSharding(mesh, spec), arr
+        )
+
+    return jax.tree.map(one, specs, host_arrays)

@@ -1,0 +1,204 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+Lowers + compiles every (architecture × input-shape) cell on the production
+meshes and records memory/cost/collective analysis:
+
+    PYTHONPATH=src python -m repro.launch.dryrun                 # all cells, 1-pod
+    PYTHONPATH=src python -m repro.launch.dryrun --multi-pod     # 2-pod mesh
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+
+Results append to results/dryrun_<mesh>.json (incremental; safe to re-run a
+subset). EXPERIMENTS.md §Dry-run / §Roofline are generated from these files.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, LM_SHAPES, SHAPES_BY_NAME, shape_applicable
+from repro.launch.cells import build_cell, lower_cell
+from repro.launch.mesh import make_production_mesh
+from repro.roofline import HW_V5E, model_flops, parse_collective_bytes, roofline_report
+from repro.roofline.hlo_flops import entry_bytes
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results")
+
+
+def _cost_dict(compiled) -> dict:
+    c = compiled.cost_analysis()
+    if isinstance(c, (list, tuple)):
+        c = c[0] if c else {}
+    return dict(c) if c else {}
+
+
+def _memory_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    out = {}
+    for attr in (
+        "generated_code_size_in_bytes",
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "alias_size_in_bytes",
+        "host_generated_code_size_in_bytes",
+        "host_argument_size_in_bytes",
+        "host_output_size_in_bytes",
+        "host_temp_size_in_bytes",
+    ):
+        if hasattr(ma, attr):
+            out[attr] = int(getattr(ma, attr))
+    if not out:
+        out["repr"] = str(ma)
+    return out
+
+
+def run_cell(
+    arch_name: str, shape_name: str, mesh, mesh_name: str, *, costing: bool = True, **kw
+) -> dict:
+    """Up to two lowers per cell:
+
+    1. the DEPLOYABLE artifact (lax.scan layers, microbatched) — proves the
+       sharding compiles and yields memory_analysis (the fits-in-HBM proof);
+    2. the COSTING artifact (``costing_mode()``: every scan unrolled,
+       microbatches=1) — yields true per-chip flops/bytes/collective-bytes,
+       since XLA cost analysis counts a while-loop body only once. Expensive
+       to compile; the multi-pod pass (sharding proof only, §Roofline is
+       single-pod) runs with ``costing=False``.
+    """
+    from repro.models.common import costing_mode
+
+    cfg = ARCHS[arch_name]
+    shape = SHAPES_BY_NAME[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    rec = {"arch": arch_name, "shape": shape_name, "mesh": mesh_name}
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        return rec
+    t0 = time.time()
+    try:
+        with mesh:
+            cell = build_cell(cfg, shape, mesh, **kw)
+            lowered = lower_cell(cell)
+            compiled = lowered.compile()
+            memory = _memory_dict(compiled)
+            if costing:
+                # costing lower: unrolled scans, single macro-batch
+                kw_cost = dict(kw)
+                if "microbatches" in kw_cost:
+                    kw_cost["microbatches"] = 1
+                with costing_mode():
+                    cost_cell = build_cell(cfg, shape, mesh, **kw_cost)
+                    cost_compiled = lower_cell(cost_cell).compile()
+            else:
+                cost_compiled = compiled
+        cost = _cost_dict(cost_compiled)
+        hlo = cost_compiled.as_text()
+        del cost_compiled
+        coll = parse_collective_bytes(hlo)
+        # memory term from kernel-level ENTRY traffic (fusion-aware), not
+        # cost_analysis 'bytes accessed' (which descends into fusion bodies
+        # and over-counts ~20x vs what a TPU actually moves through HBM)
+        kbytes = entry_bytes(hlo)
+        cost = dict(cost)
+        cost["bytes accessed raw"] = cost.get("bytes accessed", 0.0)
+        cost["bytes accessed"] = float(kbytes)
+        mflops = model_flops(cfg, shape)
+        chips = mesh.devices.size
+        report = roofline_report(
+            arch=arch_name,
+            shape=shape_name,
+            mesh_name=mesh_name,
+            chips=chips,
+            cost=cost,
+            coll_bytes_per_chip=coll["total"],
+            mflops=mflops,
+            peak_bytes_per_chip=float(
+                memory.get("argument_size_in_bytes", 0)
+                + memory.get("temp_size_in_bytes", 0)
+                - memory.get("alias_size_in_bytes", 0)
+            ),
+        )
+        rec.update(
+            status="ok",
+            seconds=round(time.time() - t0, 1),
+            chips=chips,
+            cost={k: cost[k] for k in ("flops", "bytes accessed", "bytes accessed raw") if k in cost},
+            memory=memory,
+            collectives=coll,
+            roofline=report.row(),
+        )
+    except Exception as e:  # noqa: BLE001 — failures ARE the dry-run output
+        rec.update(
+            status="error",
+            seconds=round(time.time() - t0, 1),
+            error=f"{type(e).__name__}: {e}",
+            traceback=traceback.format_exc()[-2000:],
+        )
+    return rec
+
+
+def load_results(path: str) -> dict:
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    return {}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape name (default: all)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=8)
+    ap.add_argument("--force", action="store_true", help="re-run cached cells")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    mesh_name = "pod2x16x16" if args.multi_pod else "pod16x16"
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    out_path = args.out or os.path.join(RESULTS_DIR, f"dryrun_{mesh_name}.json")
+    results = load_results(out_path)
+
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else [s.name for s in LM_SHAPES]
+
+    failures = 0
+    for a in archs:
+        for s in shapes:
+            key = f"{a}:{s}"
+            if key in results and results[key].get("status") in ("ok", "skipped") and not args.force:
+                print(f"[cached ] {key:48s} {results[key]['status']}")
+                continue
+            kw = {"microbatches": args.microbatches} if SHAPES_BY_NAME[s].kind == "train" else {}
+            rec = run_cell(a, s, mesh, mesh_name, costing=not args.multi_pod, **kw)
+            results[key] = rec
+            with open(out_path, "w") as f:
+                json.dump(results, f, indent=1)
+            status = rec["status"]
+            extra = ""
+            if status == "ok":
+                r = rec["roofline"]
+                extra = (
+                    f"dom={r['dominant']:10s} "
+                    f"t={max(r['compute_s'], r['memory_s'], r['collective_s']):.4f}s "
+                    f"frac={r['roofline_fraction']:.3f}"
+                )
+            elif status == "error":
+                extra = rec["error"][:120]
+                failures += 1
+            print(f"[{status:7s}] {key:48s} {extra}")
+    print(f"\n{mesh_name}: {len(results)} cells, {failures} failures -> {out_path}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

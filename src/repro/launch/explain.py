@@ -1,0 +1,66 @@
+"""Explanation-serving driver — the paper's low-latency XAI end to end.
+
+    PYTHONPATH=src python -m repro.launch.explain --arch llama3-8b \
+        --method paper --m 64 --n-int 4
+
+Embeds a batch of prompts, runs NUIG (stage-1 probe + stage-2 attribution)
+in embedding space, and prints per-token scores + convergence deltas for
+paper vs uniform at the same step budget.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, get_config, reduced
+from repro.models.registry import Model
+from repro.serve import ExplainRequest, ExplainService
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b", choices=sorted(ARCHS))
+    ap.add_argument("--method", default="paper",
+                    choices=["uniform", "paper", "warp", "gauss", "refine"])
+    ap.add_argument("--m", type=int, default=64)
+    ap.add_argument("--n-int", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=24)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = reduced(get_config(args.arch))
+    if cfg.frontend or cfg.is_encdec:
+        print(f"note: {cfg.name} frontend is stubbed; explaining token stream only")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+
+    rng = np.random.default_rng(args.seed)
+    reqs = [
+        ExplainRequest(
+            tokens=rng.integers(0, cfg.vocab_size, size=args.seq).astype(np.int32),
+            target=int(rng.integers(0, cfg.vocab_size)),
+        )
+        for _ in range(args.batch)
+    ]
+
+    for method in (args.method, "uniform"):
+        svc = ExplainService(cfg, params, method=method, m=args.m, n_int=args.n_int)
+        t0 = time.time()
+        out = svc.explain(reqs)
+        dt = time.time() - t0
+        deltas = [o["delta"] for o in out]
+        print(
+            f"method={method:8s} m={args.m} wall={dt:.2f}s "
+            f"mean_delta={np.mean(deltas):.5f} max_delta={np.max(deltas):.5f}"
+        )
+    top = np.argsort(-np.abs(out[0]["token_scores"]))[:5]
+    print("top-5 attributed positions (req 0):", top)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

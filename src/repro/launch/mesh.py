@@ -1,0 +1,29 @@
+"""Production mesh construction (deliverable e).
+
+A FUNCTION, not a module-level constant — importing this module never touches
+jax device state (smoke tests must keep seeing 1 CPU device).
+
+Meshes:
+  single pod:  (data=16, model=16)                 — 256 chips (one v5e pod)
+  multi-pod:   (pod=2, data=16, model=16)          — 512 chips
+
+Axis semantics across the stack:
+  pod    — outermost data parallelism; gradient all-reduce crosses DCN here.
+  data   — in-pod data parallelism (+ FSDP shard axis, + sequence-parallel
+           axis for long-context decode).
+  model  — tensor parallelism: heads / mlp / vocab / experts (EP) / SSM heads.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over however many real devices exist (tests)."""
+    return jax.make_mesh((data, model), ("data", "model"))

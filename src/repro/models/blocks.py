@@ -1,0 +1,227 @@
+"""Layer assembly: (mixer, ffn) pairs per LayerSpec, forward + decode paths."""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, LayerSpec
+from repro.models import attention as attn
+from repro.models import ssm
+from repro.models.common import ParamDef
+from repro.models.layers import mlp, mlp_def, rmsnorm, rmsnorm_def, rope
+from repro.models.moe import moe, moe_def
+
+
+def layer_def(cfg: ArchConfig, spec: LayerSpec, *, cross: bool = False) -> dict:
+    d: dict[str, Any] = {}
+    if spec.mixer in ("attn", "local"):
+        d["norm1"] = rmsnorm_def(cfg.d_model)
+        d["mixer"] = attn.attn_def(cfg)
+    elif spec.mixer == "mamba":
+        d["norm1"] = rmsnorm_def(cfg.d_model)
+        d["mixer"] = ssm.ssm_def(cfg)
+    if cross:
+        d["norm_x"] = rmsnorm_def(cfg.d_model)
+        d["cross"] = attn.attn_def(cfg, cross=True)
+    if spec.ffn == "dense":
+        d["norm2"] = rmsnorm_def(cfg.d_model)
+        d["ffn"] = mlp_def(cfg.d_model, cfg.d_ff)
+    elif spec.ffn == "moe":
+        d["norm2"] = rmsnorm_def(cfg.d_model)
+        d["ffn"] = moe_def(cfg)
+    return d
+
+
+# ------------------------------------------------------------------ forward
+
+
+def apply_layer(
+    cfg: ArchConfig,
+    spec: LayerSpec,
+    p: dict,
+    x: jax.Array,
+    *,
+    positions: jax.Array,
+    causal: bool = True,
+    enc_out: Optional[jax.Array] = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence layer. Returns (x, moe_aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    dt = x.dtype
+    if spec.mixer in ("attn", "local"):
+        h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+        q, k, v = attn.qkv(p["mixer"], h, dt)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        o = attn.dispatch_attention(cfg, q, k, v, mixer=spec.mixer, causal=causal)
+        x = x + attn.out_proj(p["mixer"], o, dt)
+    elif spec.mixer == "mamba":
+        h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+        x = x + ssm.ssm_forward(p["mixer"], h, cfg, cfg.norm_eps)
+    if "cross" in p and enc_out is not None:
+        h = rmsnorm(p["norm_x"], x, cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, p["cross"]["wq"].astype(dt))
+        k = jnp.einsum("bsd,dhk->bshk", enc_out, p["cross"]["wk"].astype(dt))
+        v = jnp.einsum("bsd,dhk->bshk", enc_out, p["cross"]["wv"].astype(dt))
+        o = attn.full_attention(q, k, v, causal=False)
+        x = x + attn.out_proj(p["cross"], o, dt)
+    if spec.ffn == "dense":
+        h = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        x = x + mlp(p["ffn"], h)
+    elif spec.ffn == "moe":
+        h = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        y, aux = moe(p["ffn"], h, cfg)
+        x = x + y
+    return x, aux
+
+
+# ------------------------------------------------------------- cache create
+
+
+def layer_cache(
+    cfg: ArchConfig,
+    spec: LayerSpec,
+    batch: int,
+    max_len: int,
+    dtype,
+    *,
+    kv_slots: int = 0,
+) -> dict:
+    """Empty decode cache for one layer. kv_slots: TP-expanded KV head count."""
+    hd = cfg.resolved_head_dim
+    kh = max(cfg.num_kv_heads, kv_slots or cfg.num_kv_heads)
+    if spec.mixer == "attn":
+        shape = (batch, max_len, kh, hd)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if spec.mixer == "local":
+        w = min(cfg.sliding_window or max_len, max_len)
+        shape = (batch, w, kh, hd)  # ring buffer
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if spec.mixer == "mamba":
+        return ssm.ssm_init_cache(cfg, batch, dtype)
+    return {}
+
+
+# ---------------------------------------------------------- prefill (+cache)
+
+
+def apply_layer_prefill(
+    cfg: ArchConfig,
+    spec: LayerSpec,
+    p: dict,
+    x: jax.Array,
+    cache: dict,
+    *,
+    positions: jax.Array,
+    enc_out: Optional[jax.Array] = None,
+) -> tuple[jax.Array, dict]:
+    """Forward over the prompt AND populate the decode cache."""
+    dt = x.dtype
+    if spec.mixer in ("attn", "local"):
+        h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+        q, k, v = attn.qkv(p["mixer"], h, dt)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        o = attn.dispatch_attention(cfg, q, k, v, mixer=spec.mixer, causal=True)
+        x = x + attn.out_proj(p["mixer"], o, dt)
+        slots = cache["k"].shape[2]
+        ke, ve = attn.expand_kv(k, slots), attn.expand_kv(v, slots)
+        if spec.mixer == "local":
+            w = cache["k"].shape[1]
+            S = k.shape[1]
+            if S >= w:  # last w tokens, rotated so slot = pos % w
+                tail_k, tail_v = ke[:, S - w :], ve[:, S - w :]
+                shift = S % w  # oldest tail element belongs at slot (S-w)%w == S%w
+                cache = {
+                    "k": jnp.roll(tail_k, shift, axis=1),
+                    "v": jnp.roll(tail_v, shift, axis=1),
+                }
+            else:
+                cache = {
+                    "k": cache["k"].at[:, :S].set(ke),
+                    "v": cache["v"].at[:, :S].set(ve),
+                }
+        else:
+            cache = {
+                "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], ke, 0, axis=1),
+                "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], ve, 0, axis=1),
+            }
+    elif spec.mixer == "mamba":
+        h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+        y, new_state = ssm.ssm_forward_with_state(p["mixer"], h, cfg, cfg.norm_eps)
+        x = x + y
+        cache = new_state
+    if "cross" in p and enc_out is not None:
+        h = rmsnorm(p["norm_x"], x, cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, p["cross"]["wq"].astype(dt))
+        k = jnp.einsum("bsd,dhk->bshk", enc_out, p["cross"]["wk"].astype(dt))
+        v = jnp.einsum("bsd,dhk->bshk", enc_out, p["cross"]["wv"].astype(dt))
+        o = attn.full_attention(q, k, v, causal=False)
+        x = x + attn.out_proj(p["cross"], o, dt)
+        cache = dict(cache) if cache else {}
+        cache["xk"], cache["xv"] = k, v  # cross KV reused every decode step
+    if spec.ffn == "dense":
+        h = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        x = x + mlp(p["ffn"], h)
+    elif spec.ffn == "moe":
+        h = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        y, _ = moe(p["ffn"], h, cfg)
+        x = x + y
+    return x, cache
+
+
+# -------------------------------------------------------------------- decode
+
+
+def apply_layer_decode(
+    cfg: ArchConfig,
+    spec: LayerSpec,
+    p: dict,
+    x: jax.Array,  # (B, 1, d)
+    cache: dict,
+    pos: jax.Array,  # () int32 — position of the incoming token
+) -> tuple[jax.Array, dict]:
+    dt = x.dtype
+    new_cache = dict(cache)
+    if spec.mixer in ("attn", "local"):
+        h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+        q, k, v = attn.qkv(p["mixer"], h, dt)
+        posv = pos[None] if pos.ndim == 0 else pos
+        q = rope(q, jnp.broadcast_to(posv, (x.shape[0], 1)), cfg.rope_theta)
+        k = rope(k, jnp.broadcast_to(posv, (x.shape[0], 1)), cfg.rope_theta)
+        slots = cache["k"].shape[2]
+        ke, ve = attn.expand_kv(k, slots), attn.expand_kv(v, slots)
+        if spec.mixer == "local":
+            w = cache["k"].shape[1]
+            slot = pos % w
+            kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], ke, slot, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], ve, slot, axis=1)
+            o = attn.decode_attention(q, kc, vc, pos + 1, ring=True)
+        else:
+            kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], ke, pos, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], ve, pos, axis=1)
+            o = attn.decode_attention(q, kc, vc, pos + 1)
+        new_cache["k"], new_cache["v"] = kc, vc
+        x = x + attn.out_proj(p["mixer"], o, dt)
+    elif spec.mixer == "mamba":
+        h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+        y, sc = ssm.ssm_decode_step(
+            p["mixer"], h, {"state": cache["state"], "conv": cache["conv"]}, cfg, cfg.norm_eps
+        )
+        x = x + y
+        new_cache["state"], new_cache["conv"] = sc["state"], sc["conv"]
+    if "cross" in p and "xk" in cache:
+        h = rmsnorm(p["norm_x"], x, cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, p["cross"]["wq"].astype(dt))
+        o = attn.full_attention(q, cache["xk"], cache["xv"], causal=False)
+        x = x + attn.out_proj(p["cross"], o, dt)
+    if spec.ffn == "dense":
+        h = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        x = x + mlp(p["ffn"], h)
+    elif spec.ffn == "moe":
+        h = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        y, _ = moe(p["ffn"], h, cfg)
+        x = x + y
+    return x, new_cache

@@ -1,0 +1,80 @@
+"""Inception-style small convnet — the paper's vision reproduction model.
+
+The paper runs IG on InceptionV3/ImageNet; this is the same *shape* of model
+(conv stem -> mixed blocks with parallel 1x1/3x3/5x5/pool towers -> GAP head)
+at CPU scale. IG interpolates raw pixels, exactly as in the paper.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_cnn import CnnConfig
+from repro.models import common
+from repro.models.common import ParamDef
+
+
+def _conv_def(cin: int, cout: int, k: int) -> ParamDef:
+    return ParamDef((k, k, cin, cout), (None, None, None, None))
+
+
+def param_defs(cfg: CnnConfig) -> dict:
+    defs: dict[str, Any] = {
+        "stem": {"w": _conv_def(cfg.channels, cfg.stem_features, 3),
+                 "b": ParamDef((cfg.stem_features,), (None,), init="zeros")}
+    }
+    cin = cfg.stem_features
+    for i, (f1, f3, f5, fp) in enumerate(cfg.blocks):
+        defs[f"block{i}"] = {
+            "t1": _conv_def(cin, f1, 1),
+            "t3a": _conv_def(cin, f3 // 2, 1),
+            "t3b": _conv_def(f3 // 2, f3, 3),
+            "t5a": _conv_def(cin, f5 // 2, 1),
+            "t5b": _conv_def(f5 // 2, f5, 5),
+            "tp": _conv_def(cin, fp, 1),
+        }
+        cin = f1 + f3 + f5 + fp
+    defs["head"] = {
+        "w": ParamDef((cin, cfg.num_classes), (None, None)),
+        "b": ParamDef((cfg.num_classes,), (None,), init="zeros"),
+    }
+    return defs
+
+
+def init(cfg: CnnConfig, key: jax.Array) -> Any:
+    return common.init_params(key, param_defs(cfg))
+
+
+def _conv(x: jax.Array, w: jax.Array, stride: int = 1) -> jax.Array:
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+
+
+def _pool(x: jax.Array, k: int = 3, stride: int = 1) -> jax.Array:
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, stride, stride, 1), "SAME"
+    )
+
+
+def forward(cfg: CnnConfig, params: Any, images: jax.Array) -> jax.Array:
+    """images: (B, H, W, C) -> logits (B, num_classes)."""
+    x = jax.nn.relu(_conv(images, params["stem"]["w"], 2) + params["stem"]["b"])
+    for i in range(len(cfg.blocks)):
+        p = params[f"block{i}"]
+        t1 = jax.nn.relu(_conv(x, p["t1"]))
+        t3 = jax.nn.relu(_conv(jax.nn.relu(_conv(x, p["t3a"])), p["t3b"]))
+        t5 = jax.nn.relu(_conv(jax.nn.relu(_conv(x, p["t5a"])), p["t5b"]))
+        tp = jax.nn.relu(_conv(_pool(x), p["tp"]))
+        x = jnp.concatenate([t1, t3, t5, tp], axis=-1)
+        x = _pool(x, 3, 2)
+    x = x.mean(axis=(1, 2))  # GAP
+    return x @ params["head"]["w"] + params["head"]["b"]
+
+
+def prob_fn(cfg: CnnConfig, params: Any, images: jax.Array, target: jax.Array) -> jax.Array:
+    """Target-class probability — the paper's IG output function f."""
+    p = jax.nn.softmax(forward(cfg, params, images), axis=-1)
+    return jnp.take_along_axis(p, target[:, None], axis=-1)[:, 0]

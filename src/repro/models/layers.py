@@ -1,0 +1,136 @@
+"""Core layers: RMSNorm, RoPE, SwiGLU MLP, embeddings, chunked loss."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import ParamDef
+from repro.models import common as _common
+from repro.sharding.context import constrain
+
+# --------------------------------------------------------------------- norm
+
+
+def rmsnorm_def(d: int) -> dict:
+    return {"scale": ParamDef((d,), (None,), init="ones")}
+
+
+def rmsnorm(p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+# --------------------------------------------------------------------- rope
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., S, H, D); positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., :, None].astype(jnp.float32) * freq  # (..., S, half)
+    angles = angles[..., :, None, :]  # broadcast over heads
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- mlp
+
+
+def mlp_def(d: int, f: int) -> dict:
+    return {
+        "wi_gate": ParamDef((d, f), ("embed", "mlp")),
+        "wi_up": ParamDef((d, f), ("embed", "mlp")),
+        "wo": ParamDef((f, d), ("mlp", "embed")),
+    }
+
+
+def mlp(p: dict, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    g = jnp.einsum("...d,df->...f", x, p["wi_gate"].astype(dt))
+    u = jnp.einsum("...d,df->...f", x, p["wi_up"].astype(dt))
+    h = jax.nn.silu(g) * u
+    h = constrain(h, "batch", "seq", "model")  # keep hidden TP-sharded
+    return jnp.einsum("...f,fd->...d", h, p["wo"].astype(dt))
+
+
+# --------------------------------------------------------------- embeddings
+
+
+def embed_def(cfg: ArchConfig) -> dict:
+    d = {"embedding": ParamDef((cfg.vocab_size, cfg.d_model), ("vocab", "embed"), init="embed")}
+    if not cfg.tie_embeddings:
+        d["unembed"] = ParamDef((cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+    if cfg.frontend:
+        d["frontend_proj"] = ParamDef(
+            ((cfg.frontend_dim or cfg.d_model), cfg.d_model), ("frontend", "embed")
+        )
+    return d
+
+
+def embed(p: dict, tokens: jax.Array, cfg: ArchConfig, dtype) -> jax.Array:
+    e = jnp.take(p["embedding"], tokens, axis=0).astype(dtype)
+    if cfg.name.startswith("gemma"):
+        e = e * jnp.asarray(cfg.d_model**0.5, dtype)
+    return e
+
+
+def project_frontend(p: dict, feats: jax.Array, dtype) -> jax.Array:
+    """Project stub frontend embeddings (audio frames / vision patches)."""
+    return jnp.einsum("...f,fd->...d", feats.astype(dtype), p["frontend_proj"].astype(dtype))
+
+
+def unembed(p: dict, h: jax.Array, cfg: ArchConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        w = p["embedding"].astype(h.dtype)  # (V, d)
+        return jnp.einsum("...d,vd->...v", h, w)
+    return jnp.einsum("...d,dv->...v", h, p["unembed"].astype(h.dtype))
+
+
+# ----------------------------------------------------------- chunked loss
+
+
+def softmax_xent_chunked(
+    p_embed: dict,
+    h: jax.Array,  # (B, S, d) final hidden states
+    labels: jax.Array,  # (B, S) int32
+    cfg: ArchConfig,
+    chunk: int = 512,
+) -> jax.Array:
+    """Cross-entropy without materializing full (B, S, V) logits.
+
+    Scans over sequence chunks; each chunk's logits live only inside the scan
+    body (remat-friendly; vocab stays sharded on the 'model' mesh axis).
+    """
+    B, S, _ = h.shape
+    if _common.COSTING:
+        chunk = S  # costing mode: no scan, true flop count
+    chunk = min(chunk, S)
+    n = S // chunk
+    hs = h[:, : n * chunk].reshape(B, n, chunk, -1).swapaxes(0, 1)
+    ls = labels[:, : n * chunk].reshape(B, n, chunk).swapaxes(0, 1)
+
+    def body(tot, xs):
+        hc, lc = xs
+        logits = unembed(p_embed, hc, cfg).astype(jnp.float32)  # (B, c, V)
+        logits = constrain(logits, "batch", None, "model")  # vocab stays TP
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return tot + jnp.sum(logz - gold), None
+
+    total, _ = _common.scan_or_unroll(body, jnp.zeros((), jnp.float32), (hs, ls))
+    rem = S - n * chunk
+    if rem:
+        logits = unembed(p_embed, h[:, n * chunk :], cfg).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[:, n * chunk :, None], axis=-1)[..., 0]
+        total = total + jnp.sum(logz - gold)
+    return total / (B * S)

@@ -1,0 +1,245 @@
+"""Unified language model (dense / MoE / SSM / hybrid / enc-dec / VLM).
+
+Layers are grouped into *periods* (one repetition of ``cfg.pattern``) and the
+period stack is driven by ``lax.scan`` so the lowered HLO stays small for
+62–94-layer configs; trailing remainder layers run unscanned.
+
+Entry points (all pure functions of (cfg, params, ...)):
+  param_defs / init / abstract_params        — parameters
+  forward_hidden(tokens|embeds) -> (h, aux)  — backbone
+  loss                                        — chunked softmax xent
+  prefill -> (logits_last, cache)             — build decode cache
+  decode_step(cache, token) -> (logits, cache)
+  embed_inputs / hidden_from_embeds           — embedding-space hooks for IG
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, LayerSpec
+from repro.models import blocks
+from repro.models import common
+from repro.models.common import ParamDef, scan_or_unroll, stack_defs
+from repro.sharding.context import constrain
+from repro.models.layers import (
+    embed,
+    embed_def,
+    project_frontend,
+    rmsnorm,
+    rmsnorm_def,
+    softmax_xent_chunked,
+    unembed,
+)
+
+# ---------------------------------------------------------------- parameters
+
+
+def param_defs(cfg: ArchConfig) -> dict:
+    cross = cfg.is_encdec
+    defs: dict[str, Any] = {
+        "embed": embed_def(cfg),
+        "final_norm": rmsnorm_def(cfg.d_model),
+        "layers": tuple(
+            stack_defs(blocks.layer_def(cfg, spec, cross=cross), cfg.num_periods)
+            for spec in cfg.pattern
+        ),
+        "rem": tuple(blocks.layer_def(cfg, spec, cross=cross) for spec in cfg.remainder_specs),
+    }
+    if cfg.is_encdec:
+        enc_spec = LayerSpec("attn", "dense")
+        defs["encoder"] = {
+            "layers": stack_defs(blocks.layer_def(cfg, enc_spec), cfg.encoder_layers),
+            "final_norm": rmsnorm_def(cfg.d_model),
+        }
+    return defs
+
+
+def init(cfg: ArchConfig, key: jax.Array) -> Any:
+    return common.init_params(key, param_defs(cfg))
+
+
+def abstract_params(cfg: ArchConfig) -> Any:
+    return common.abstract_params(param_defs(cfg))
+
+
+# ---------------------------------------------------------------- embeddings
+
+
+def embed_inputs(cfg: ArchConfig, params: Any, batch: dict) -> jax.Array:
+    """Token (+ stub frontend) inputs -> backbone embeddings (B, S, d).
+
+    VLM: projected patch embeddings are prepended to the token embeddings.
+    Audio (whisper): frontend feeds the *encoder*; see ``encode``.
+    """
+    dt = jnp.dtype(cfg.compute_dtype)
+    e = embed(params["embed"], batch["tokens"], cfg, dt)
+    if cfg.frontend == "vision" and "frontend" in batch:
+        fe = project_frontend(params["embed"], batch["frontend"], dt)
+        e = jnp.concatenate([fe, e], axis=1)
+    return constrain(e, "batch", "seq", None)
+
+
+def encode(cfg: ArchConfig, params: Any, frontend: jax.Array) -> jax.Array:
+    """Encoder stack over stub frontend embeddings (whisper)."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = project_frontend(params["embed"], frontend, dt)
+    pos = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+    enc_spec = LayerSpec("attn", "dense")
+
+    def body(carry, lp):
+        y, _ = blocks.apply_layer(cfg, enc_spec, lp, carry, positions=pos, causal=False)
+        return y, None
+
+    x, _ = scan_or_unroll(body, x, params["encoder"]["layers"])
+    return rmsnorm(params["encoder"]["final_norm"], x, cfg.norm_eps)
+
+
+# ------------------------------------------------------------------ backbone
+
+
+def hidden_from_embeds(
+    cfg: ArchConfig,
+    params: Any,
+    e: jax.Array,
+    *,
+    enc_out: Optional[jax.Array] = None,
+    remat: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Backbone over embeddings. Returns (hidden (B,S,d), moe_aux)."""
+    pos = jnp.broadcast_to(jnp.arange(e.shape[1]), e.shape[:2])
+
+    def period(x, period_params):
+        aux = jnp.zeros((), jnp.float32)
+        for spec, lp in zip(cfg.pattern, period_params):
+            x, a = blocks.apply_layer(
+                cfg, spec, lp, x, positions=pos, causal=True, enc_out=enc_out
+            )
+            x = constrain(x, "batch", "seq", None)  # residual stays DP/SP
+            aux = aux + a
+        return x, aux
+
+    body = jax.checkpoint(period) if remat else period
+
+    def scan_body(x, period_params):
+        return body(x, period_params)
+
+    x, auxs = scan_or_unroll(scan_body, e, params["layers"])
+    aux = auxs.sum()
+    for spec, lp in zip(cfg.remainder_specs, params["rem"]):
+        x, a = blocks.apply_layer(cfg, spec, lp, x, positions=pos, causal=True, enc_out=enc_out)
+        aux = aux + a
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, aux
+
+
+def forward_hidden(
+    cfg: ArchConfig, params: Any, batch: dict, *, remat: bool = False
+) -> tuple[jax.Array, jax.Array]:
+    enc_out = None
+    if cfg.is_encdec:
+        enc_out = encode(cfg, params, batch["frontend"])
+    e = embed_inputs(cfg, params, batch)
+    return hidden_from_embeds(cfg, params, e, enc_out=enc_out, remat=remat)
+
+
+def logits(cfg: ArchConfig, params: Any, h: jax.Array) -> jax.Array:
+    return unembed(params["embed"], h, cfg)
+
+
+def loss(cfg: ArchConfig, params: Any, batch: dict, *, remat: bool = False) -> jax.Array:
+    """Next-token xent (+ MoE aux). labels: (B, S_text)."""
+    h, aux = forward_hidden(cfg, params, batch, remat=remat)
+    if cfg.frontend == "vision":  # only text positions carry labels
+        h = h[:, -batch["labels"].shape[1] :]
+    return softmax_xent_chunked(params["embed"], h, batch["labels"], cfg) + aux
+
+
+# ----------------------------------------------------------------- serving
+
+
+def init_cache(
+    cfg: ArchConfig, batch: int, max_len: int, *, kv_slots: int = 0
+) -> dict:
+    dt = jnp.dtype(cfg.compute_dtype)
+    cache: dict[str, Any] = {
+        "layers": tuple(
+            jax.tree.map(
+                lambda x: jnp.zeros((cfg.num_periods,) + x.shape, x.dtype),
+                blocks.layer_cache(cfg, spec, batch, max_len, dt, kv_slots=kv_slots),
+            )
+            for spec in cfg.pattern
+        ),
+        "rem": tuple(
+            blocks.layer_cache(cfg, spec, batch, max_len, dt, kv_slots=kv_slots)
+            for spec in cfg.remainder_specs
+        ),
+        "len": jnp.zeros((), jnp.int32),
+    }
+    return cache
+
+
+def prefill(
+    cfg: ArchConfig, params: Any, batch: dict, max_len: int, *, kv_slots: int = 0
+) -> tuple[jax.Array, dict]:
+    """Run the prompt, build the cache, return last-position logits."""
+    enc_out = encode(cfg, params, batch["frontend"]) if cfg.is_encdec else None
+    e = embed_inputs(cfg, params, batch)
+    B, S, _ = e.shape
+    # S includes prepended frontend tokens; a too-small cache would silently
+    # clamp decode writes (dynamic_update_slice semantics) and corrupt.
+    assert S <= max_len, f"prefill length {S} exceeds cache max_len {max_len}"
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    cache = init_cache(cfg, B, max_len, kv_slots=kv_slots)
+
+    def period(x, xs):
+        period_params, period_cache = xs
+        new_caches = []
+        for spec, lp, lc in zip(cfg.pattern, period_params, period_cache):
+            x, nc = blocks.apply_layer_prefill(
+                cfg, spec, lp, x, lc, positions=pos, enc_out=enc_out
+            )
+            x = constrain(x, "batch", "seq", None)
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    x, layer_caches = scan_or_unroll(period, e, (params["layers"], cache["layers"]))
+    new_rem = []
+    for spec, lp, lc in zip(cfg.remainder_specs, params["rem"], cache["rem"]):
+        x, nc = blocks.apply_layer_prefill(cfg, spec, lp, x, lc, positions=pos, enc_out=enc_out)
+        new_rem.append(nc)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    lg = logits(cfg, params, x[:, -1:])
+    new_cache = {"layers": layer_caches, "rem": tuple(new_rem), "len": jnp.asarray(S, jnp.int32)}
+    return lg, new_cache
+
+
+def decode_step(
+    cfg: ArchConfig, params: Any, cache: dict, token: jax.Array
+) -> tuple[jax.Array, dict]:
+    """token: (B, 1) int32 -> (logits (B, 1, V), updated cache)."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = embed(params["embed"], token, cfg, dt)
+    pos = cache["len"]
+
+    def period(x, xs):
+        period_params, period_cache = xs
+        new_caches = []
+        for spec, lp, lc in zip(cfg.pattern, period_params, period_cache):
+            x, nc = blocks.apply_layer_decode(cfg, spec, lp, x, lc, pos)
+            x = constrain(x, "batch", "seq", None)
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    x, layer_caches = scan_or_unroll(period, x, (params["layers"], cache["layers"]))
+    new_rem = []
+    for spec, lp, lc in zip(cfg.remainder_specs, params["rem"], cache["rem"]):
+        x, nc = blocks.apply_layer_decode(cfg, spec, lp, x, lc, pos)
+        new_rem.append(nc)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    lg = logits(cfg, params, x)
+    new_cache = {"layers": layer_caches, "rem": tuple(new_rem), "len": pos + 1}
+    return lg, new_cache

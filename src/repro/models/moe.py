@@ -1,0 +1,84 @@
+"""Mixture-of-Experts: top-k token-choice routing, sort-based capacity dispatch.
+
+TPU-native design notes (vs a CUDA grouped-GEMM):
+  * dispatch = argsort by expert id + rank-within-expert scatter into a dense
+    (E, C, d) buffer -> one batched einsum over experts hits the MXU;
+  * under pjit the expert axis is sharded on the 'model' mesh axis (EP); the
+    scatter/gather lower to the all-to-all pattern a hand-written MoE layer
+    would issue;
+  * capacity keeps every shape static (XLA requirement); dropped tokens fall
+    back to the residual stream, standard for capacity-based MoE.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import ParamDef
+from repro.sharding.context import constrain
+
+
+def moe_def(cfg: ArchConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.moe_d_ff or cfg.d_ff, cfg.num_experts
+    return {
+        "router": ParamDef((d, e), ("embed", None), scale=0.02),
+        "wi_gate": ParamDef((e, d, f), ("experts", "embed", "mlp")),
+        "wi_up": ParamDef((e, d, f), ("experts", "embed", "mlp")),
+        "wo": ParamDef((e, f, d), ("experts", "mlp", "embed")),
+    }
+
+
+def capacity(tokens: int, cfg: ArchConfig) -> int:
+    c = int(tokens * cfg.experts_per_tok * cfg.capacity_factor / cfg.num_experts)
+    return max(8, -(-c // 8) * 8)  # round up to 8 for TPU-friendly tiling
+
+
+def moe(p: dict, x: jax.Array, cfg: ArchConfig) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (y, aux_loss). Top-k routing with capacity dropping."""
+    B, S, d = x.shape
+    T = B * S
+    E, k = cfg.num_experts, cfg.experts_per_tok
+    C = capacity(T, cfg)
+    xt = x.reshape(T, d)
+    dt = x.dtype
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)  # (T, E)
+    gate, eid = jax.lax.top_k(probs, k)  # (T, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # ---- load-balance aux loss (Switch-style)
+    me = probs.mean(0)  # mean router prob per expert
+    ce = jnp.zeros((E,), jnp.float32).at[eid.reshape(-1)].add(1.0) / (T * k)
+    aux = cfg.router_aux_weight * E * jnp.sum(me * ce)
+
+    # ---- sort-based dispatch
+    flat_e = eid.reshape(-1)  # (T*k,)
+    order = jnp.argsort(flat_e)  # stable
+    se = flat_e[order]  # sorted expert ids
+    st = order // k  # token index of each sorted slot
+    sg = gate.reshape(-1)[order].astype(dt)
+    counts = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.cumsum(counts) - counts  # first sorted slot of each expert
+    rank = jnp.arange(T * k) - starts[se]  # position within expert
+    keep = rank < C
+
+    buf = jnp.zeros((E, C, d), dt)
+    buf = buf.at[jnp.where(keep, se, E - 1), jnp.where(keep, rank, C - 1)].add(
+        jnp.where(keep[:, None], xt[st], 0)
+    )
+    buf = constrain(buf, "model", None, None)  # EP: experts stay sharded
+
+    # ---- expert computation (batched einsum over the expert axis; EP-sharded)
+    g = jnp.einsum("ecd,edf->ecf", buf, p["wi_gate"].astype(dt))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["wi_up"].astype(dt))
+    h = jax.nn.silu(g) * u
+    out = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(dt))  # (E, C, d)
+    out = constrain(out, "model", None, None)
+
+    # ---- combine
+    gathered = out[jnp.where(keep, se, 0), jnp.where(keep, rank, 0)]  # (T*k, d)
+    contrib = jnp.where(keep[:, None], gathered * sg[:, None], 0)
+    y = jnp.zeros((T, d), dt).at[st].add(contrib)
+    return y.reshape(B, S, d), aux

@@ -1,0 +1,17 @@
+from repro.roofline.analyze import (
+    HW_V5E,
+    Hardware,
+    RooflineReport,
+    parse_collective_bytes,
+    roofline_report,
+    model_flops,
+)
+
+__all__ = [
+    "HW_V5E",
+    "Hardware",
+    "RooflineReport",
+    "parse_collective_bytes",
+    "roofline_report",
+    "model_flops",
+]

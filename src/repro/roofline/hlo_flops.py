@@ -1,0 +1,316 @@
+"""Per-instruction dot/conv FLOP attribution from HLO text.
+
+``cost_analysis()`` gives one aggregate number; this parser breaks it down by
+instruction so the §Perf loop can see WHICH matmuls dominate (and whether the
+SPMD partitioner inflated any of them — e.g. a contracting-dim sharding that
+forced a replicated matmul).
+
+flops(dot) = 2 * prod(output_shape) * prod(lhs_contracting_dim_sizes)
+(batch dims are already part of the output shape).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+import numpy as np
+
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DOT = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*(?P<out>\w+\[[\d,]*\][^\s]*)\s+dot\("
+    r"(?P<operands>[^)]*)\)"
+    r".*?lhs_contracting_dims=\{(?P<lhs_c>[\d,]*)\}",
+)
+_DEF = re.compile(r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*(?P<type>\w+\[[\d,]*\][^\s]*)\s+(?P<op>[\w\-]+)\(")
+
+
+def _dims(type_str: str) -> list[int]:
+    m = _SHAPE.search(type_str)
+    if not m:
+        return []
+    return [int(x) for x in m.group(2).split(",") if x]
+
+
+def dot_flops_by_instruction(hlo_text: str) -> list[tuple[str, float, str]]:
+    """[(instruction name, flops, fingerprint)] for every dot, descending."""
+    shapes: dict[str, str] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF.match(line)
+        if m:
+            shapes[m.group("name")] = m.group("type")
+
+    out = []
+    opname = re.compile(r"%?([\w.\-]+)")
+    for line in hlo_text.splitlines():
+        m = _DOT.match(line)
+        if not m:
+            continue
+        out_dims = _dims(m.group("out"))
+        ops = [t.strip() for t in m.group("operands").split(",")]
+        lhs_name = opname.match(ops[0]).group(1) if ops else ""
+        lhs_type = shapes.get(lhs_name, ops[0] if ops else "")
+        lhs_dims = _dims(lhs_type)
+        c_idx = [int(i) for i in m.group("lhs_c").split(",") if i]
+        contract = int(np.prod([lhs_dims[i] for i in c_idx])) if lhs_dims else 1
+        flops = 2.0 * float(np.prod(out_dims) if out_dims else 0) * contract
+        fingerprint = f"{lhs_type} . rhs -> {m.group('out')}"
+        out.append((m.group("name"), flops, fingerprint))
+    out.sort(key=lambda t: -t[1])
+    return out
+
+
+def dot_flops_summary(hlo_text: str, top: int = 12) -> dict:
+    per = dot_flops_by_instruction(hlo_text)
+    total = sum(f for _, f, _ in per)
+    by_shape: dict[str, float] = defaultdict(float)
+    counts: dict[str, int] = defaultdict(int)
+    for _, f, fp in per:
+        by_shape[fp] += f
+        counts[fp] += 1
+    rows = sorted(by_shape.items(), key=lambda kv: -kv[1])[:top]
+    return {
+        "total_dot_flops": total,
+        "num_dots": len(per),
+        "top": [
+            {"shape": fp, "flops": f, "count": counts[fp], "frac": f / total if total else 0}
+            for fp, f in rows
+        ],
+    }
+
+
+# ------------------------------------------------------- kernel-level bytes
+
+_ENTRY_RE = re.compile(r"^ENTRY\s")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*(?P<type>\([^=]*?\)|[\w\[\],{}/ ]+?)\s+(?P<op>[\w\-]+)\("
+)
+_SHAPE_ALL = re.compile(r"(\w+)\[([\d,]*)\]")
+_FREE_OPS = {
+    # no HBM traffic of their own (aliasing / metadata / layout-free)
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "bitcast-convert", "after-all", "partition-id", "replica-id", "iota",
+    # async -done halves: traffic charged on the -start op
+    "all-reduce-done", "all-gather-done", "collective-permute-done",
+    "async-done", "copy-done",
+}
+_DTYPE_B = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_ALL.findall(type_str):
+        if dt not in _DTYPE_B:
+            continue
+        n = int(np.prod([int(d) for d in dims.split(",") if d])) if dims else 1
+        total += n * _DTYPE_B[dt]
+    return total
+
+
+# ops whose operands/outputs genuinely stream through HBM on TPU (a tiled
+# matmul / reduce / data-movement kernel); pure elementwise chains fuse into
+# their neighbors' loads/stores and move no extra HBM bytes.
+_HEAVY_OPS = {
+    "dot", "convolution", "reduce", "reduce-window", "sort", "gather",
+    "scatter", "dynamic-slice", "dynamic-update-slice", "fusion", "pad",
+    "concatenate", "reverse", "cumsum", "rng", "rng-bit-generator",
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-reduce-start", "all-gather-start",
+    "collective-permute-start", "copy", "copy-start", "select-and-scatter",
+    "triangular-solve", "cholesky", "fft",
+}
+
+
+_COMP_RE = re.compile(r"^%?([\w.\-]+)\s*(?:\([^)]*\))?\s*->.*\{\s*$|^%?([\w.\-]+)\s+\(")
+_LAYOUT_ONLY = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "convert", "copy", "transpose", "reshape", "broadcast", "slice",
+    "bitcast-convert",
+}
+
+
+def _computation_ops(hlo_text: str) -> dict:
+    """computation name -> set of ops inside (for fusion-body inspection)."""
+    comps: dict[str, set] = {}
+    current = None
+    header = re.compile(r"^%?([\w.\-]+)\s*\(.*\)\s*->")
+    for line in hlo_text.splitlines():
+        h = header.match(line.strip())
+        if h and "{" in line:
+            current = h.group(1)
+            comps[current] = set()
+            continue
+        if current is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            comps[current].add(m.group("op"))
+        if line.strip() == "}":
+            current = None
+    return comps
+
+
+def _free_fusions(hlo_text: str) -> set:
+    """Fusions whose body is pure layout/convert work.
+
+    XLA:CPU materializes f32 copies of bf16 matmul operands as convert-only
+    fusions (no native bf16 dot); a TPU fuses the convert into the operand
+    load. Charging them would count the whole KV cache / weight tensor twice
+    per matmul in f32 — measured as 60% of decode 'memory' on qwen3-235b.
+    """
+    comps = _computation_ops(hlo_text)
+    return {
+        name
+        for name, ops in comps.items()
+        if ops and ops <= _LAYOUT_ONLY
+    }
+
+
+def _parse_entry(hlo_text: str):
+    """Yield (name, type, op, operand names) for ENTRY instructions."""
+    in_entry = False
+    depth = 0
+    opname = re.compile(r"%?([\w.\-]+)")
+    for line in hlo_text.splitlines():
+        if _ENTRY_RE.match(line):
+            in_entry = True
+            depth = 0
+        if not in_entry:
+            continue
+        depth += line.count("{") - line.count("}")
+        m = _INSTR_RE.match(line)
+        if m:
+            op = m.group("op")
+            operands = []
+            paren = line.split(f"{op}(", 1)
+            if len(paren) == 2:
+                for tok in paren[1].split(")", 1)[0].split(","):
+                    tok = tok.strip()
+                    nm = opname.match(tok)
+                    if nm:
+                        operands.append(nm.group(1))
+            yield m.group("name"), m.group("type"), op, operands
+        if in_entry and depth <= 0 and "}" in line and not _ENTRY_RE.match(line):
+            break
+
+
+def entry_bytes(hlo_text: str, *, fusion_aware: bool = True) -> int:
+    """HBM traffic estimate of the ENTRY computation.
+
+    fusion_aware=True models TPU fusion: only HEAVY ops (matmuls, reduces,
+    data movement, collectives) stream operands+outputs through HBM; a pure
+    elementwise/layout op is charged only when its result feeds >1 consumer
+    (it must materialize once) — otherwise it fuses into its neighbor.
+    fusion_aware=False charges every top-level instruction (kernel-per-op,
+    XLA:CPU-like; pessimistic upper bound).
+    """
+    instrs = list(_parse_entry(hlo_text))
+    shapes = {n: t for n, t, _, _ in instrs}
+    if not fusion_aware:
+        total = 0
+        for _, t, op, operands in instrs:
+            if op in _FREE_OPS:
+                continue
+            total += _type_bytes(t)
+            total += sum(_type_bytes(shapes[o]) for o in operands if o in shapes)
+        return total
+
+    consumers: dict[str, int] = {}
+    for _, _, op, operands in instrs:
+        for o in operands:
+            consumers[o] = consumers.get(o, 0) + 1
+    free_fus = _free_fusions(hlo_text)
+    calls_re = re.compile(r"calls=%?([\w.\-]+)")
+    fusion_calls: dict[str, str] = {}
+    fusion_first_operand: dict[str, str] = {}
+    for n, t, op, operands in instrs:
+        if op == "fusion":
+            if operands:
+                fusion_first_operand[n] = operands[0]
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if m and m.group("op") == "fusion":
+            c = calls_re.search(line)
+            if c:
+                fusion_calls[m.group("name")] = c.group(1)
+
+    def operand_bytes(o: str) -> int:
+        # look through convert-only fusions: a TPU reads the ORIGINAL dtype
+        # and converts in the matmul's operand pipeline. Charge min(fusion
+        # output, original input): slice-like bodies read less than their
+        # input, convert bodies less than their f32 output.
+        best = _type_bytes(shapes.get(o, ""))
+        seen = 0
+        while (
+            o in fusion_calls
+            and fusion_calls[o] in free_fus
+            and o in fusion_first_operand
+            and seen < 4
+        ):
+            o = fusion_first_operand[o]
+            b = _type_bytes(shapes.get(o, ""))
+            if b:
+                best = min(best, b) if best else b
+            seen += 1
+        return best
+
+    total = 0
+    for name, t, op, operands in instrs:
+        if op in _FREE_OPS:
+            continue
+        if op == "fusion" and fusion_calls.get(name) in free_fus:
+            continue  # layout/convert-only fusion: free on TPU
+        if op in _HEAVY_OPS:
+            total += _type_bytes(t)
+            total += sum(operand_bytes(o) for o in operands)
+        elif consumers.get(name, 0) > 1:
+            total += _type_bytes(t)  # multi-use intermediate materializes once
+    return total
+
+
+def entry_bytes_by_op(hlo_text: str, top: int = 15) -> list[dict]:
+    """Top ENTRY instructions by kernel-level bytes (memory-term attribution).
+
+    Groups by (op, output type) fingerprint, same accounting as entry_bytes.
+    """
+    in_entry = False
+    shapes: dict[str, str] = {}
+    agg: dict[str, list] = {}
+    opname = re.compile(r"%?([\w.\-]+)")
+    for line in hlo_text.splitlines():
+        if _ENTRY_RE.match(line):
+            in_entry = True
+        if not in_entry:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        shapes[m.group("name")] = m.group("type")
+        op = m.group("op")
+        if op in _FREE_OPS:
+            continue
+        b = _type_bytes(m.group("type"))
+        paren = line.split(f"{op}(", 1)
+        if len(paren) == 2:
+            for tok in paren[1].split(")", 1)[0].split(","):
+                tok = tok.strip()
+                if _SHAPE_ALL.search(tok):
+                    b += _type_bytes(tok)
+                    continue
+                nm = opname.match(tok)
+                if nm and nm.group(1) in shapes:
+                    b += _type_bytes(shapes[nm.group(1)])
+        key = f"{op} -> {m.group('type').strip()[:80]}"
+        if key not in agg:
+            agg[key] = [0, 0]
+        agg[key][0] += b
+        agg[key][1] += 1
+    rows = sorted(agg.items(), key=lambda kv: -kv[1][0])[:top]
+    total = sum(v[0] for v in agg.values())
+    return [
+        {"op": k, "bytes": v[0], "count": v[1], "frac": v[0] / total if total else 0}
+        for k, v in rows
+    ]

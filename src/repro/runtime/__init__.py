@@ -1,0 +1,15 @@
+from repro.runtime.fault import (
+    FaultConfig,
+    RetryPolicy,
+    StragglerMonitor,
+    ElasticMesh,
+    run_with_recovery,
+)
+
+__all__ = [
+    "FaultConfig",
+    "RetryPolicy",
+    "StragglerMonitor",
+    "ElasticMesh",
+    "run_with_recovery",
+]

@@ -1,0 +1,10 @@
+from repro.serve.engine import ServeEngine, make_serve_step, make_prefill_step
+from repro.serve.explain_service import ExplainService, ExplainRequest
+
+__all__ = [
+    "ServeEngine",
+    "make_serve_step",
+    "make_prefill_step",
+    "ExplainService",
+    "ExplainRequest",
+]

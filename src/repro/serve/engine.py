@@ -1,0 +1,66 @@
+"""Serving engine: batched prefill + decode with a static KV cache.
+
+``make_serve_step``/``make_prefill_step`` return the pure functions the
+multi-pod dry-run lowers for the decode_*/prefill_* cells. ``ServeEngine``
+drives them for real batched generation (examples/serve_lm.py).
+
+The cache is fully static-shape (max_len fixed at engine construction);
+decode_32k lowers one new token against a seq_len cache, exactly as the
+assignment specifies.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.registry import Model
+
+
+def make_prefill_step(cfg: ArchConfig, max_len: int, *, kv_slots: int = 0) -> Callable:
+    model = Model(cfg)
+
+    def prefill_step(params: Any, batch: dict) -> tuple[jax.Array, dict]:
+        logits, cache = model.prefill(params, batch, max_len, kv_slots=kv_slots)
+        return logits, cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, *, greedy: bool = True) -> Callable:
+    """(params, cache, token (B,1)) -> (next_token (B,1), cache)."""
+    model = Model(cfg)
+
+    def serve_step(params: Any, cache: dict, token: jax.Array) -> tuple[jax.Array, dict]:
+        logits, cache = model.decode_step(params, cache, token)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return nxt, cache
+
+    return serve_step
+
+
+@dataclass
+class ServeEngine:
+    """Greedy batched generation over a static cache."""
+
+    cfg: ArchConfig
+    params: Any
+    max_len: int
+    kv_slots: int = 0
+
+    def __post_init__(self):
+        self._prefill = jax.jit(make_prefill_step(self.cfg, self.max_len, kv_slots=self.kv_slots))
+        self._step = jax.jit(make_serve_step(self.cfg), donate_argnums=(1,))
+
+    def generate(self, batch: dict, num_tokens: int) -> jax.Array:
+        """batch: prompt dict -> (B, num_tokens) generated ids (greedy)."""
+        logits, cache = self._prefill(self.params, batch)
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        out = [tok]
+        for _ in range(num_tokens - 1):
+            tok, cache = self._step(self.params, cache, tok)
+            out.append(tok)
+        return jnp.concatenate(out, axis=1)

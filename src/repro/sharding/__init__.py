@@ -1,0 +1,29 @@
+from repro.sharding.partition import (
+    MeshRules,
+    DEFAULT_RULES,
+    FSDP_RULES,
+    SP_RULES,
+    logical_to_spec,
+    param_specs,
+    param_shardings,
+    batch_spec,
+    activation_specs,
+    spec_for_batch_tree,
+)
+from repro.sharding.trees import train_state_specs, cache_specs, to_shardings
+
+__all__ = [
+    "MeshRules",
+    "DEFAULT_RULES",
+    "FSDP_RULES",
+    "SP_RULES",
+    "logical_to_spec",
+    "param_specs",
+    "param_shardings",
+    "batch_spec",
+    "activation_specs",
+    "spec_for_batch_tree",
+    "train_state_specs",
+    "cache_specs",
+    "to_shardings",
+]

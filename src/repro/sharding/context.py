@@ -1,0 +1,86 @@
+"""Activation sharding constraints (MaxText-style logical constraints).
+
+Why this exists: with FSDP-sharded weights and batch-sharded activations the
+SPMD partitioner may legally choose to REPLICATE activations and all-reduce
+partial sums instead of all-gathering weights — measured on llama3-8b
+train_4k as a 1.1 TB/chip all-reduce and full-global-batch matmuls on every
+chip. Pinning activations with ``with_sharding_constraint`` removes that
+degree of freedom.
+
+Model code is mesh-agnostic: it calls ``constrain(x, "batch", "seq",
+"model")`` with LOGICAL names; the active ``ActivationPolicy`` (installed by
+the cell builder / launcher via ``activation_sharding(mesh, ...)``) maps them
+to mesh axes, checks divisibility, and applies the constraint. With no
+policy installed (unit tests, single-device training) it is a no-op.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+_POLICY: contextvars.ContextVar[Optional["ActivationPolicy"]] = contextvars.ContextVar(
+    "activation_policy", default=None
+)
+
+
+@dataclass(frozen=True)
+class ActivationPolicy:
+    mapping: dict  # logical name -> tuple of mesh axis names
+    sizes: dict  # mesh axis name -> size
+
+
+def make_policy(mesh: Mesh, *, seq_sharded: bool = False) -> ActivationPolicy:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    batch_axes = tuple(a for a in ("pod", "data") if a in sizes)
+    return ActivationPolicy(
+        mapping={
+            "batch": () if seq_sharded else batch_axes,
+            "seq": (("data",) if "data" in sizes else ()) if seq_sharded else (),
+            "model": ("model",) if "model" in sizes else (),
+        },
+        sizes=sizes,
+    )
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, *, seq_sharded: bool = False):
+    token = _POLICY.set(make_policy(mesh, seq_sharded=seq_sharded))
+    try:
+        yield
+    finally:
+        _POLICY.reset(token)
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Pin ``x``'s sharding by logical dim names; no-op without a policy.
+
+    ``logical`` has one entry per dim: "batch" / "seq" / "model" / None.
+    Indivisible dims fall back to replicated (never an error).
+    """
+    pol = _POLICY.get()
+    if pol is None:
+        return x
+    assert len(logical) == x.ndim, (logical, x.shape)
+    used: set[str] = set()
+    spec = []
+    nontrivial = False
+    for dim, name in zip(x.shape, logical):
+        axes = tuple(
+            a for a in pol.mapping.get(name, ()) if a in pol.sizes and a not in used
+        )
+        prod = int(np.prod([pol.sizes[a] for a in axes])) if axes else 1
+        if axes and dim % prod == 0 and dim >= prod:
+            used.update(axes)
+            spec.append(axes if len(axes) > 1 else axes[0])
+            nontrivial = True
+        else:
+            spec.append(None)
+    if not nontrivial:
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*spec))

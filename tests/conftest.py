@@ -1,0 +1,11 @@
+"""Shared fixtures. NOTE: never set xla_force_host_platform_device_count
+here — smoke tests and benches must see the 1 real CPU device; only
+``repro.launch.dryrun`` (its own process) requests 512 placeholders.
+"""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)

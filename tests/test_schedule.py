@@ -1,0 +1,195 @@
+"""Property tests (hypothesis) for the schedule layer — the paper's core.
+
+Invariants:
+  * every schedule's weights sum to 1 (it discretizes ∫_0^1);
+  * alphas lie in [0, 1] and are sorted;
+  * `paper` integer allocation: sums to m, >= min_steps everywhere;
+  * `paper`/`warp`/`gauss` integrate smooth functions at least as well as a
+    crude bound; exactness on constants (completeness of the Riemann sum);
+  * largest-remainder rounding is fair (each interval within 1 of quota).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import schedule
+
+MAX_EXAMPLES = 50
+
+
+def _boundary_vals(draw_vals):
+    return jnp.asarray(draw_vals, jnp.float32)
+
+
+@st.composite
+def boundary_values(draw, min_n=2, max_n=12):
+    n = draw(st.integers(min_n, max_n))
+    vals = draw(
+        st.lists(
+            st.floats(-10, 10, allow_nan=False, width=32), min_size=n + 1, max_size=n + 1
+        )
+    )
+    return np.asarray(vals, np.float32)
+
+
+@st.composite
+def m_and_boundaries(draw):
+    vals = draw(boundary_values())
+    n = len(vals) - 1
+    m = draw(st.integers(n, 256))
+    return m, vals
+
+
+# ----------------------------------------------------------------- uniform
+
+
+@pytest.mark.parametrize("rule", ["midpoint", "left", "right", "trapezoid"])
+@pytest.mark.parametrize("m", [1, 2, 7, 64])
+def test_uniform_weights_sum_to_one(rule, m):
+    if rule == "trapezoid" and m == 1:
+        pytest.skip("trapezoid needs >= 2 nodes")
+    s = schedule.uniform(m, rule)
+    np.testing.assert_allclose(s.weights.sum(), 1.0, rtol=1e-5)
+    assert s.alphas.shape == (m,)
+    assert float(s.alphas.min()) >= 0.0 and float(s.alphas.max()) <= 1.0
+
+
+# ------------------------------------------------------------- allocation
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(m_and_boundaries())
+def test_paper_allocation_sums_to_m(mb):
+    m, vals = mb
+    imp = schedule.normalized_deltas(jnp.asarray(vals))
+    alloc = schedule.allocate_steps(imp, m, min_steps=1)
+    assert int(alloc.sum()) == m
+    assert int(alloc.min()) >= 1
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(m_and_boundaries())
+def test_largest_remainder_fairness(mb):
+    """Each interval's integer allocation is within 1 of its exact quota."""
+    m, vals = mb
+    imp = np.asarray(schedule.normalized_deltas(jnp.asarray(vals)))
+    n = len(imp)
+    alloc = np.asarray(schedule.allocate_steps(jnp.asarray(imp), m, min_steps=1))
+    quota = imp * (m - n) + 1  # min_steps=1 baseline + proportional budget
+    assert np.all(alloc >= np.floor(quota) - 1e-6)
+    assert np.all(alloc <= np.ceil(quota) + 1e-6)
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(m_and_boundaries())
+def test_paper_schedule_invariants(mb):
+    m, vals = mb
+    s = schedule.paper(jnp.asarray(vals), m)
+    a, w = np.asarray(s.alphas), np.asarray(s.weights)
+    assert a.shape == (m,) and w.shape == (m,)
+    np.testing.assert_allclose(w.sum(), 1.0, rtol=1e-4)
+    assert np.all(a >= 0) and np.all(a <= 1)
+    assert np.all(np.diff(a) >= -1e-6), "paper schedule must be sorted"
+    assert np.all(w > 0)
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(m_and_boundaries())
+def test_warp_schedule_invariants(mb):
+    m, vals = mb
+    s = schedule.warp(jnp.asarray(vals), m)
+    a, w = np.asarray(s.alphas), np.asarray(s.weights)
+    np.testing.assert_allclose(w.sum(), 1.0, rtol=1e-4)
+    assert np.all(a >= 0) and np.all(a <= 1 + 1e-6)
+    assert np.all(np.diff(a) >= -1e-6)
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(m_and_boundaries())
+def test_gauss_schedule_invariants(mb):
+    m, vals = mb
+    n = len(vals) - 1
+    if m < n:
+        m = n
+    s = schedule.gauss(jnp.asarray(vals), m)
+    a, w = np.asarray(s.alphas), np.asarray(s.weights)
+    np.testing.assert_allclose(w.sum(), 1.0, rtol=1e-4)
+    assert np.all(a >= 0) and np.all(a <= 1)
+
+
+# --------------------------------------------------- quadrature exactness
+
+
+@pytest.mark.parametrize("method", ["uniform", "paper", "warp", "gauss"])
+def test_exact_on_constants(method):
+    """∫ c dα == c — the completeness axiom at the schedule level."""
+    vals = jnp.asarray([0.0, 0.3, 0.9, 1.0, 1.0])  # 4 intervals
+    m = 32
+    if method == "uniform":
+        s = schedule.uniform(m)
+    else:
+        s = getattr(schedule, method)(vals, m)
+    integral = float(jnp.sum(s.weights * 5.0))
+    np.testing.assert_allclose(integral, 5.0, rtol=1e-5)
+
+
+@pytest.mark.parametrize("method", ["paper", "warp", "gauss"])
+def test_integrates_smooth_function(method):
+    """Non-uniform schedules integrate exp(-x) to reasonable accuracy."""
+    vals = jnp.asarray([0.0, 0.6, 0.85, 0.95, 1.0])
+    m = 64
+    s = getattr(schedule, method)(vals, m)
+    est = float(jnp.sum(s.weights * jnp.exp(-s.alphas)))
+    true = 1.0 - np.exp(-1.0)
+    assert abs(est - true) < 2e-3, (method, est, true)
+
+
+def test_gauss_beats_midpoint_on_smooth():
+    vals = jnp.asarray([0.0, 0.5, 1.0])
+    m = 16
+    f = lambda a: jnp.sin(3 * a)
+    true = (1 - np.cos(3.0)) / 3.0
+    for lo, hi in [("uniform", "gauss")]:
+        s_lo = schedule.uniform(m)
+        s_hi = schedule.gauss(vals, m)
+        err_lo = abs(float(jnp.sum(s_lo.weights * f(s_lo.alphas))) - true)
+        err_hi = abs(float(jnp.sum(s_hi.weights * f(s_hi.alphas))) - true)
+        assert err_hi < err_lo
+
+
+def test_sqrt_power_softens_allocation():
+    """Paper §III: sqrt attenuates the bias vs linear weighting."""
+    vals = jnp.asarray([0.0, 0.9, 0.95, 1.0, 1.0])  # one dominant interval
+    m = 64
+    lin = schedule.normalized_deltas(vals, power=1.0)
+    sq = schedule.normalized_deltas(vals, power=0.5)
+    a_lin = schedule.allocate_steps(lin, m, min_steps=0)
+    a_sq = schedule.allocate_steps(sq, m, min_steps=0)
+    assert int(a_sq.min()) >= int(a_lin.min())
+    assert int(a_sq.max()) <= int(a_lin.max())
+
+
+def test_flat_region_fallback_uniform():
+    """All-flat probe values -> uniform importance, no NaNs."""
+    vals = jnp.zeros((5,))
+    imp = np.asarray(schedule.normalized_deltas(vals))
+    np.testing.assert_allclose(imp, 0.25, rtol=1e-6)
+
+
+def test_batched_schedules():
+    vals = jnp.asarray([[0.0, 0.5, 1.0], [0.0, 0.9, 1.0]])
+    s = schedule.paper(vals, 16)
+    assert s.alphas.shape == (2, 16)
+    np.testing.assert_allclose(np.asarray(s.weights.sum(-1)), 1.0, rtol=1e-4)
+
+
+def test_from_boundaries_padding():
+    """Zero-width (padding) intervals receive zero steps."""
+    bounds = jnp.asarray([[0.0, 0.5, 1.0, 1.0]])  # last interval zero-width
+    vals = jnp.asarray([[0.0, 0.7, 1.0, 1.0]])
+    s = schedule.from_boundaries(bounds, vals, 16)
+    a = np.asarray(s.alphas[0])
+    assert np.all(a <= 1.0)
+    np.testing.assert_allclose(np.asarray(s.weights.sum(-1)), 1.0, rtol=1e-4)

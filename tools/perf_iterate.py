@@ -1,0 +1,87 @@
+"""§Perf iteration driver: lower one cell with knob overrides, print terms.
+
+    PYTHONPATH=src python tools/perf_iterate.py llama3-8b train_4k \
+        --microbatches 4 --grad-compression
+    PYTHONPATH=src python tools/perf_iterate.py qwen3-moe-235b-a22b decode_32k \
+        --serve-dtype bfloat16
+
+Prints the three roofline terms + top dot shapes so each hypothesis ->
+change -> measure cycle is one command. Results are NOT cached (always
+fresh); compare against results/dryrun_pod16x16.json baselines.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import time
+
+import jax
+
+from repro.configs import ARCHS, SHAPES_BY_NAME
+from repro.launch.cells import build_cell, lower_cell
+from repro.launch.mesh import make_production_mesh
+from repro.models.common import costing_mode
+from repro.roofline import HW_V5E, model_flops, parse_collective_bytes, roofline_report
+from repro.roofline.hlo_flops import dot_flops_summary, entry_bytes, entry_bytes_by_op
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("arch")
+    ap.add_argument("shape")
+    ap.add_argument("--microbatches", type=int, default=8)
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--serve-dtype", default="float32")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top-dots", type=int, default=8)
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    cfg = ARCHS[args.arch]
+    shape = SHAPES_BY_NAME[args.shape]
+    kw = {}
+    if shape.kind == "train":
+        kw = dict(
+            microbatches=1,  # costing variant
+            remat=not args.no_remat,
+            grad_compression=args.grad_compression,
+        )
+    else:
+        kw = dict(serve_dtype=args.serve_dtype)
+
+    t0 = time.time()
+    with mesh, costing_mode():
+        cell = build_cell(cfg, shape, mesh, **kw)
+        compiled = lower_cell(cell).compile()
+    hlo = compiled.as_text()
+    cost = dict(compiled.cost_analysis())
+    coll = parse_collective_bytes(hlo)
+    kb = entry_bytes(hlo)
+    rep = roofline_report(
+        arch=args.arch, shape=args.shape, mesh_name="perf", chips=mesh.devices.size,
+        cost={"flops": cost.get("flops", 0), "bytes accessed": kb},
+        coll_bytes_per_chip=coll["total"], mflops=model_flops(cfg, shape),
+    )
+    print(f"\n{args.arch}:{args.shape}  (compile {time.time()-t0:.0f}s, knobs {kw})")
+    print(
+        f"  compute={rep.compute_s:.4f}s memory={rep.memory_s:.4f}s "
+        f"collective={rep.collective_s:.4f}s dominant={rep.dominant}"
+    )
+    print(
+        f"  flops/chip={rep.flops_per_chip:.3e} bytes/chip={kb:.3e} "
+        f"coll/chip={coll['total']:.3e} useful={rep.useful_flops_ratio:.3f} "
+        f"frac={rep.roofline_fraction:.4f}"
+    )
+    print("  collectives:", {k: f"{v/2**30:.2f}GiB" for k, v in coll.items() if v})
+    s = dot_flops_summary(hlo, top=args.top_dots)
+    print(f"  top dots ({s['num_dots']} total, {s['total_dot_flops']:.3e} flops):")
+    for r in s["top"]:
+        print(f"    {r['frac']*100:5.1f}% x{r['count']:<4d} {r['shape'][:100]}")
+    print("  top memory ops:")
+    for r in entry_bytes_by_op(hlo, top=args.top_dots):
+        print(f"    {r['frac']*100:5.1f}% x{r['count']:<5d} {r['bytes']:.2e}B  {r['op'][:95]}")
+
+
+if __name__ == "__main__":
+    main()
