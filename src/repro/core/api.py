@@ -9,7 +9,7 @@
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -23,10 +23,10 @@ from repro.core.schedule import Schedule
 @dataclass
 class Explainer:
     f: ScalarFn
-    method: str = "paper"  # uniform | paper | warp | gauss | refine
+    method: str = "paper"  # any name in schedule.SCHEDULES
     m: int = 64  # total interpolation steps
     n_int: int = 4  # stage-1 intervals (paper sweeps 2..8)
-    refine_rounds: int = 4  # for method == "refine"
+    refine_rounds: int = 4  # for the "refine" probe
     power: float = 0.5  # sqrt attenuation (paper); 1.0 = linear
     min_steps: int = 1
     rule: str = "midpoint"  # uniform-rule variant
@@ -35,36 +35,48 @@ class Explainer:
     accum_fn: Callable = None
 
     def build_schedule(
-        self, x: jax.Array, baseline: jax.Array, target: jax.Array
+        self,
+        x: jax.Array,
+        baseline: jax.Array,
+        target: Any,
+        mask: Optional[jax.Array] = None,
     ) -> Schedule:
-        """Stage 1 (probe) + step allocation. Probe cost: n_int+1 forwards."""
-        if self.method == "uniform":
-            return schedule.uniform(self.m, self.rule)
-        if self.method == "refine":
-            b, v = probes.refined_boundaries(
-                self.f, x, baseline, target, self.n_int, self.refine_rounds
-            )
-            return schedule.from_boundaries(b, v, self.m, power=self.power)
-        vals = probes.boundary_values(self.f, x, baseline, target, self.n_int)
-        if self.method == "paper":
-            return schedule.paper(vals, self.m, power=self.power, min_steps=self.min_steps)
-        if self.method == "warp":
-            return schedule.warp(vals, self.m, power=self.power)
-        if self.method == "gauss":
-            return schedule.gauss(vals, self.m, power=self.power)
-        raise ValueError(f"unknown method {self.method!r}")
+        """Stage 1 (probe) + step allocation, dispatched via the registry.
+
+        Every family (refine included) rides the same path: run the probe
+        its ``ScheduleFamily.probe`` spec names, hand the result to its
+        uniform-signature builder. Probe cost: n_int+1 (+rounds) forwards.
+        """
+        fam = schedule.family(self.method)
+        probe = probes.run_probe(
+            fam.probe,
+            self.f,
+            x,
+            baseline,
+            target,
+            n_int=self.n_int,
+            rounds=self.refine_rounds,
+            mask=mask,
+        )
+        return fam.build(
+            probe, self.m, power=self.power, min_steps=self.min_steps, rule=self.rule
+        )
 
     def attribute(
-        self, x: jax.Array, baseline: jax.Array, target: jax.Array
+        self,
+        x: jax.Array,
+        baseline: jax.Array,
+        target: Any,
+        mask: Optional[jax.Array] = None,
     ) -> IGResult:
-        sched = self.build_schedule(x, baseline, target)
+        sched = self.build_schedule(x, baseline, target, mask)
         kw = {}
         if self.interp_fn is not None:
             kw["interp_fn"] = self.interp_fn
         if self.accum_fn is not None:
             kw["accum_fn"] = self.accum_fn
         return ig.attribute(
-            self.f, x, baseline, sched, target, chunk=self.chunk, **kw
+            self.f, x, baseline, sched, target, mask=mask, chunk=self.chunk, **kw
         )
 
     def jitted(self) -> Callable:

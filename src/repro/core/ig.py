@@ -8,17 +8,24 @@ executable serves any m and memory stays bounded.
 
 Kernel injection: ``interp_fn`` / ``accum_fn`` default to the pure-jnp oracles
 and can be swapped for the Pallas kernels in ``repro.kernels``.
+
+Masking (shape-bucketed serving, DESIGN.md §6): ``mask`` marks real
+positions of right-padded inputs. It is threaded through ``interp_fn`` (padded
+positions never leave the baseline), ``accum_fn`` (padded gradients never
+accumulate), the final attribution (exact zeros at padded positions), and the
+completeness gap δ (summed over real positions only — which the exact zeros
+make the same as summing everything).
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.paths import interpolate
+from repro.core.paths import interpolate, mask_to_baseline
+from repro.core.probes import ScalarFn, repeat_tree
 from repro.core.schedule import Schedule
-from repro.core.probes import ScalarFn
 
 
 class IGResult(NamedTuple):
@@ -28,8 +35,23 @@ class IGResult(NamedTuple):
     delta: jax.Array  # (B,) convergence δ (completeness gap, Eq. 3)
 
 
-def _default_accum(acc: jax.Array, grads: jax.Array, weights: jax.Array) -> jax.Array:
-    """acc (B,*F) += Σ_k w_k g_k.  grads: (B, c, *F); weights: (B, c)."""
+def _expand_mask(mask: jax.Array, ndim: int, *, lead: int = 1) -> jax.Array:
+    """(B, *L) -> (B, 1×(lead-1), *L, 1, ...) broadcastable to rank ``ndim``."""
+    shape = mask.shape[:1] + (1,) * (lead - 1) + mask.shape[1:]
+    return mask.reshape(shape + (1,) * (ndim - len(shape))).astype(jnp.float32)
+
+
+def _default_accum(
+    acc: jax.Array,
+    grads: jax.Array,
+    weights: jax.Array,
+    *,
+    mask: Optional[jax.Array] = None,
+) -> jax.Array:
+    """acc (B,*F) += Σ_k w_k g_k.  grads: (B, c, *F); weights: (B, c);
+    mask: optional (B, *L) real-position mask (padded grads are dropped)."""
+    if mask is not None:
+        grads = grads * _expand_mask(mask, grads.ndim, lead=2)
     wexp = weights.reshape(weights.shape + (1,) * (grads.ndim - 2))
     return acc + jnp.sum(grads.astype(jnp.float32) * wexp, axis=1)
 
@@ -39,18 +61,25 @@ def attribute(
     x: jax.Array,
     baseline: jax.Array,
     sched: Schedule,
-    target: jax.Array,
+    target: Any,
     *,
+    mask: Optional[jax.Array] = None,
     chunk: int = 0,
     interp_fn: Callable = interpolate,
     accum_fn: Callable = _default_accum,
 ) -> IGResult:
     """Integrated Gradients along the straight-line path with any schedule.
 
-    f: (xs (N, *F), targets (N,)) -> (N,);  x/baseline: (B, *F).
+    f: (xs (N, *F), targets) -> (N,);  x/baseline: (B, *F).
+    target: pytree of per-example arrays (plain (B,) ids, or e.g.
+    {"target": ids, "pos": positions} for bucketed serving).
     sched.alphas/weights: (m,) shared or (B, m) per-example.
+    mask: optional (B, *L) real-position mask, L a prefix of the feature dims.
     """
     B = x.shape[0]
+    # pinned view for the endpoint terms; the scan's interpolants are pinned
+    # inside interp_fn (mask kwarg) — exactly one select on each path
+    xp = mask_to_baseline(x, baseline, mask)
     alphas, weights = sched.alphas, sched.weights
     if alphas.ndim == 1:
         alphas = jnp.broadcast_to(alphas, (B,) + alphas.shape)
@@ -63,21 +92,26 @@ def attribute(
     w_ch = weights.reshape(B, n_chunks, c).swapaxes(0, 1)
 
     grad_f = jax.grad(lambda xs, t: f(xs, t).sum())
+    mkw = {} if mask is None else {"mask": mask}
 
     def step(acc, xs):
         a, w = xs  # (B, c)
-        xi = interp_fn(x, baseline, a)  # (B, c, *F)
+        xi = interp_fn(x, baseline, a, **mkw)  # (B, c, *F)
         flat = xi.reshape((B * c,) + x.shape[1:])
-        t = jnp.repeat(target, c)
+        t = repeat_tree(target, c)
         g = grad_f(flat, t).reshape((B, c) + x.shape[1:])
-        return accum_fn(acc, g, w), None
+        return accum_fn(acc, g, w, **mkw), None
 
     acc0 = jnp.zeros_like(x, dtype=jnp.float32)
     acc, _ = jax.lax.scan(step, acc0, (a_ch, w_ch))
-    attr = (x - baseline).astype(jnp.float32) * acc
+    attr = (xp - baseline).astype(jnp.float32) * acc
+    if mask is not None:
+        attr = attr * _expand_mask(mask, attr.ndim)
 
-    both = jnp.concatenate([x, baseline], axis=0)
-    fv = f(both, jnp.concatenate([target, target]))
+    both = jnp.concatenate([xp, baseline], axis=0)
+    fv = f(both, jax.tree.map(lambda t: jnp.concatenate([t, t], axis=0), target))
     f_x, f_b = fv[:B], fv[B:]
+    # attr is exactly zero at masked positions, so the full sum IS the
+    # real-token sum — δ measures completeness over real tokens only.
     delta = jnp.abs(attr.reshape(B, -1).sum(-1) - (f_x - f_b))
     return IGResult(attr, f_x, f_b, delta)

@@ -5,14 +5,38 @@ import jax
 import jax.numpy as jnp
 
 
-def interpolate(x: jax.Array, baseline: jax.Array, alphas: jax.Array) -> jax.Array:
+def mask_to_baseline(
+    x: jax.Array, baseline: jax.Array, mask: jax.Array
+) -> jax.Array:
+    """Pin masked-out positions exactly to the baseline (identity w/o mask).
+
+    mask: (B, *L) with L a prefix of x's feature dims; 1/True = real. The one
+    shared implementation — the interp oracle, the Pallas ops wrappers, and
+    the IG engine all pin through here (bucketed serving; DESIGN.md §6).
+    """
+    if mask is None:
+        return x
+    m = mask.reshape(mask.shape + (1,) * (x.ndim - mask.ndim))
+    return jnp.where(m.astype(bool), x, baseline)
+
+
+def interpolate(
+    x: jax.Array,
+    baseline: jax.Array,
+    alphas: jax.Array,
+    *,
+    mask: jax.Array = None,
+) -> jax.Array:
     """Batch of interpolants along the straight-line path.
 
     x, baseline: (B, *F);  alphas: (K,) or (B, K)  ->  (B, K, *F).
+    mask: optional (B, *L) real-position mask (L a prefix of F) — masked
+    positions stay exactly at the baseline for every α (bucketed serving).
 
     This is the pure-jnp oracle for the ``repro.kernels.interpolate`` Pallas
     kernel (which fuses the broadcast to avoid K× HBM reads of x, x').
     """
+    x = mask_to_baseline(x, baseline, mask)
     nf = x.ndim - 1
     if alphas.ndim == 1:
         a = alphas.reshape((1, -1) + (1,) * nf)

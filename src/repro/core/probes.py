@@ -4,29 +4,51 @@
 target probability per interval — the information-content metric. Probes are
 batched across (examples × boundaries) so stage 1 rides the same compiled
 forward as everything else (the paper's 0.2–3.2% overhead, §IV).
+
+``run_probe`` is the registry-facing entry point: every schedule family in
+``repro.core.schedule.SCHEDULES`` names one of the probe kinds here and the
+caller never special-cases a method. ``target`` may be any pytree of
+per-example arrays (e.g. ``{"target": ids, "pos": positions}`` for bucketed
+serving) — it is repeated along axis 0 to match the folded (batch × probe)
+axis. ``mask`` pins padded positions to the baseline so the probe never sees
+off-path interpolants for shape-bucketed requests.
 """
 from __future__ import annotations
 
-from typing import Callable
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.paths import interpolate
+from repro.core.paths import interpolate, mask_to_baseline
+from repro.core.schedule import Probe
 
-# f: (xs (N, *F), targets (N,)) -> (N,) scalar model output (prob / log-prob)
-ScalarFn = Callable[[jax.Array, jax.Array], jax.Array]
+# f: (xs (N, *F), targets) -> (N,) scalar model output (prob / log-prob).
+# ``targets`` is a pytree of (N, ...) arrays; plain (N,) ids are the common case.
+ScalarFn = Callable[[jax.Array, Any], jax.Array]
+
+
+def repeat_tree(target: Any, k: int) -> Any:
+    """Repeat every leaf k× along axis 0: (B, ...) -> (B*k, ...)."""
+    return jax.tree.map(lambda a: jnp.repeat(a, k, axis=0), target)
 
 
 def boundary_values(
-    f: ScalarFn, x: jax.Array, baseline: jax.Array, target: jax.Array, n_int: int
+    f: ScalarFn,
+    x: jax.Array,
+    baseline: jax.Array,
+    target: Any,
+    n_int: int,
+    *,
+    mask: Optional[jax.Array] = None,
 ) -> jax.Array:
     """f at the n_int+1 uniform interval boundaries. Returns (B, n_int+1)."""
     B = x.shape[0]
+    x = mask_to_baseline(x, baseline, mask)
     alphas = jnp.arange(n_int + 1) / n_int
     xi = interpolate(x, baseline, alphas)  # (B, n+1, *F)
     flat = xi.reshape((B * (n_int + 1),) + x.shape[1:])
-    t = jnp.repeat(target, n_int + 1)
+    t = repeat_tree(target, n_int + 1)
     return f(flat, t).reshape(B, n_int + 1)
 
 
@@ -34,9 +56,11 @@ def refined_boundaries(
     f: ScalarFn,
     x: jax.Array,
     baseline: jax.Array,
-    target: jax.Array,
+    target: Any,
     n0: int,
     rounds: int,
+    *,
+    mask: Optional[jax.Array] = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Beyond-paper `secant-refine`: adaptively bisect the largest-|Δf|
     interval, one probe per round (static shapes: capacity = n0+1+rounds).
@@ -45,6 +69,7 @@ def refined_boundaries(
     duplicates the rightmost boundary (zero-width intervals, zero Δf).
     """
     B = x.shape[0]
+    x = mask_to_baseline(x, baseline, mask)
     vals0 = boundary_values(f, x, baseline, target, n0)  # (B, n0+1)
     b0 = jnp.broadcast_to(jnp.arange(n0 + 1) / n0, (B, n0 + 1))
     pad = rounds
@@ -69,3 +94,28 @@ def refined_boundaries(
 
     (b, v), _ = jax.lax.scan(round_step, (b, v), None, length=rounds)
     return b, v
+
+
+def run_probe(
+    kind: str,
+    f: ScalarFn,
+    x: jax.Array,
+    baseline: jax.Array,
+    target: Any,
+    *,
+    n_int: int = 4,
+    rounds: int = 4,
+    mask: Optional[jax.Array] = None,
+) -> Optional[Probe]:
+    """Run the stage-1 probe a schedule family declares. Uniform signature
+    for every kind so registries/engines need no per-method branching."""
+    if kind == "none":
+        return None
+    if kind == "boundary":
+        vals = boundary_values(f, x, baseline, target, n_int, mask=mask)
+        bounds = jnp.broadcast_to(jnp.arange(n_int + 1) / n_int, vals.shape)
+        return Probe(bounds.astype(jnp.float32), vals)
+    if kind == "refine":
+        b, v = refined_boundaries(f, x, baseline, target, n_int, rounds, mask=mask)
+        return Probe(b, v)
+    raise ValueError(f"unknown probe kind {kind!r}")

@@ -15,7 +15,8 @@ All functions are jit-compatible and batched over examples where noted.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from dataclasses import dataclass
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -244,4 +245,78 @@ def from_boundaries(
     return Schedule(a.astype(jnp.float32), w.astype(jnp.float32))
 
 
-SCHEDULES = {"uniform": uniform, "paper": paper, "warp": warp, "gauss": gauss}
+# ------------------------------------------------------------------ registry
+
+
+class Probe(NamedTuple):
+    """Stage-1 output, schedule-family agnostic.
+
+    bounds: (..., K) sorted probe positions in [0, 1];
+    vals:   (..., K) f at those positions.
+    For the plain boundary probe the bounds are the uniform grid; the
+    secant-refine probe returns non-uniform (possibly duplicated) bounds.
+    """
+
+    bounds: jax.Array
+    vals: jax.Array
+
+
+@dataclass(frozen=True)
+class ScheduleFamily:
+    """One schedule family = a probe spec + a uniform-signature builder.
+
+    ``probe`` names the stage-1 pass the caller must run ("none" |
+    "boundary" | "refine" — see ``repro.core.probes.run_probe``); ``build``
+    maps its result to a Schedule. Every family rides the same call shape,
+    so engines dispatch by name with no per-method special cases
+    (``refine`` included — DESIGN.md §2).
+    """
+
+    name: str
+    probe: str  # "none" | "boundary" | "refine"
+    build: Callable[..., Schedule]
+
+
+def _build_uniform(
+    probe: Optional[Probe], m: int, *, power: float, min_steps: int, rule: str
+) -> Schedule:
+    return uniform(m, rule)
+
+
+def _build_paper(
+    probe: Optional[Probe], m: int, *, power: float, min_steps: int, rule: str
+) -> Schedule:
+    return paper(probe.vals, m, power=power, min_steps=min_steps, rule=rule)
+
+
+def _build_warp(
+    probe: Optional[Probe], m: int, *, power: float, min_steps: int, rule: str
+) -> Schedule:
+    return warp(probe.vals, m, power=power)
+
+
+def _build_gauss(
+    probe: Optional[Probe], m: int, *, power: float, min_steps: int, rule: str
+) -> Schedule:
+    return gauss(probe.vals, m, power=power)
+
+
+def _build_refine(
+    probe: Optional[Probe], m: int, *, power: float, min_steps: int, rule: str
+) -> Schedule:
+    return from_boundaries(probe.bounds, probe.vals, m, power=power)
+
+
+SCHEDULES: dict[str, ScheduleFamily] = {
+    "uniform": ScheduleFamily("uniform", "none", _build_uniform),
+    "paper": ScheduleFamily("paper", "boundary", _build_paper),
+    "warp": ScheduleFamily("warp", "boundary", _build_warp),
+    "gauss": ScheduleFamily("gauss", "boundary", _build_gauss),
+    "refine": ScheduleFamily("refine", "refine", _build_refine),
+}
+
+
+def family(name: str) -> ScheduleFamily:
+    if name not in SCHEDULES:
+        raise ValueError(f"unknown method {name!r}; known: {sorted(SCHEDULES)}")
+    return SCHEDULES[name]

@@ -14,6 +14,7 @@ def ig_accum(
     grads: jax.Array,
     weights: jax.Array,
     *,
+    mask: jax.Array = None,
     block_k: int = 8,
     block_f: int = 512,
     interpret: bool = True,
@@ -21,7 +22,14 @@ def ig_accum(
     """Engine-compatible drop-in for the default accumulator.
 
     acc: (B, *F) f32; grads: (B, K, *F); weights: (B, K) -> (B, *F) f32.
+    mask: optional (B, *L) real-position mask — padded-position gradients
+    are zeroed before accumulation (bucketed serving; DESIGN.md §6).
     """
+    if mask is not None:
+        mm = mask.reshape(
+            mask.shape[:1] + (1,) + mask.shape[1:] + (1,) * (grads.ndim - mask.ndim - 1)
+        )
+        grads = grads * mm.astype(grads.dtype)
     B = acc.shape[0]
     feat = acc.shape[1:]
     F = int(np.prod(feat))

@@ -7,6 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.paths import mask_to_baseline
 from repro.kernels.interpolate.kernel import interpolate_pallas
 from repro.kernels.interpolate.ref import interpolate_ref
 
@@ -26,6 +27,7 @@ def interpolate(
     baseline: jax.Array,
     alphas: jax.Array,
     *,
+    mask: jax.Array = None,
     block_k: int = 8,
     block_f: int = 512,
     interpret: bool = True,
@@ -33,7 +35,11 @@ def interpolate(
     """Engine-compatible drop-in for ``repro.core.paths.interpolate``.
 
     x, baseline: (B, *F); alphas: (K,) or (B, K) -> (B, K, *F).
+    mask: optional (B, *L) real-position mask — masked positions are pinned
+    to the baseline before the kernel runs, so padded features interpolate
+    to exactly the baseline (bucketed serving; DESIGN.md §6).
     """
+    x = mask_to_baseline(x, baseline, mask)
     B = x.shape[0]
     feat = x.shape[1:]
     F = int(np.prod(feat))

@@ -23,17 +23,20 @@ import jax
 from repro.configs import ARCHS, LM_SHAPES, SHAPES_BY_NAME, shape_applicable
 from repro.launch.cells import build_cell, lower_cell
 from repro.launch.mesh import make_production_mesh
-from repro.roofline import HW_V5E, model_flops, parse_collective_bytes, roofline_report
+from repro.roofline import (
+    HW_V5E,
+    cost_analysis_dict,
+    model_flops,
+    parse_collective_bytes,
+    roofline_report,
+)
 from repro.roofline.hlo_flops import entry_bytes
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results")
 
 
 def _cost_dict(compiled) -> dict:
-    c = compiled.cost_analysis()
-    if isinstance(c, (list, tuple)):
-        c = c[0] if c else {}
-    return dict(c) if c else {}
+    return cost_analysis_dict(compiled)
 
 
 def _memory_dict(compiled) -> dict:

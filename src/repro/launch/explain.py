@@ -1,11 +1,13 @@
-"""Explanation-serving driver — the paper's low-latency XAI end to end.
+"""Explanation-serving driver — the paper's low-latency XAI under traffic.
 
     PYTHONPATH=src python -m repro.launch.explain --arch llama3-8b \
-        --method paper --m 64 --n-int 4
+        --method paper --m 64 --n-int 4 --requests 16 --rounds 3
 
-Embeds a batch of prompts, runs NUIG (stage-1 probe + stage-2 attribution)
-in embedding space, and prints per-token scores + convergence deltas for
-paper vs uniform at the same step budget.
+Drives the shape-bucketed ExplainEngine with MIXED-LENGTH request traffic
+(random prompt lengths in [--min-seq, --max-seq]): round 1 pays the per-bucket
+compilations, later rounds ride the compiled-executable cache. Prints
+per-bucket latency, compile time, and the cache hit-rate, then the paper-vs-
+uniform convergence comparison at the same step budget.
 """
 from __future__ import annotations
 
@@ -16,19 +18,44 @@ import jax
 import numpy as np
 
 from repro.configs import ARCHS, get_config, reduced
+from repro.core.schedule import SCHEDULES
 from repro.models.registry import Model
-from repro.serve import ExplainRequest, ExplainService
+from repro.serve import ExplainEngine, ExplainRequest
+
+
+def make_traffic(cfg, n: int, lo: int, hi: int, rng) -> list[ExplainRequest]:
+    return [
+        ExplainRequest(
+            tokens=rng.integers(1, cfg.vocab_size, size=int(s)).astype(np.int32),
+            target=int(rng.integers(0, cfg.vocab_size)),
+        )
+        for s in rng.integers(lo, hi + 1, size=n)
+    ]
+
+
+def report(engine: ExplainEngine) -> None:
+    st = engine.stats
+    print(f"  executable cache: hits={st.hits} misses={st.misses} "
+          f"hit_rate={st.hit_rate:.2f}")
+    for shape in sorted(st.buckets):
+        b = st.buckets[shape]
+        print(
+            f"  bucket B={shape[0]:<3d} S={shape[1]:<5d} calls={b.calls:<3d} "
+            f"reqs={b.requests:<4d} compile={b.compile_s:.2f}s "
+            f"mean_latency={1e3 * b.mean_latency_s:.1f}ms"
+        )
 
 
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3-8b", choices=sorted(ARCHS))
-    ap.add_argument("--method", default="paper",
-                    choices=["uniform", "paper", "warp", "gauss", "refine"])
+    ap.add_argument("--method", default="paper", choices=sorted(SCHEDULES))
     ap.add_argument("--m", type=int, default=64)
     ap.add_argument("--n-int", type=int, default=4)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--seq", type=int, default=24)
+    ap.add_argument("--requests", type=int, default=16, help="requests per round")
+    ap.add_argument("--rounds", type=int, default=3, help="traffic rounds (round 1 compiles)")
+    ap.add_argument("--min-seq", type=int, default=9)
+    ap.add_argument("--max-seq", type=int, default=48)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -37,28 +64,24 @@ def main() -> int:
         print(f"note: {cfg.name} frontend is stubbed; explaining token stream only")
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
-
     rng = np.random.default_rng(args.seed)
-    reqs = [
-        ExplainRequest(
-            tokens=rng.integers(0, cfg.vocab_size, size=args.seq).astype(np.int32),
-            target=int(rng.integers(0, cfg.vocab_size)),
-        )
-        for _ in range(args.batch)
-    ]
 
+    out = None
     for method in (args.method, "uniform"):
-        svc = ExplainService(cfg, params, method=method, m=args.m, n_int=args.n_int)
-        t0 = time.time()
-        out = svc.explain(reqs)
-        dt = time.time() - t0
-        deltas = [o["delta"] for o in out]
-        print(
-            f"method={method:8s} m={args.m} wall={dt:.2f}s "
-            f"mean_delta={np.mean(deltas):.5f} max_delta={np.max(deltas):.5f}"
-        )
+        engine = ExplainEngine(cfg, params, method=method, m=args.m, n_int=args.n_int)
+        print(f"method={method} m={args.m} "
+              f"traffic={args.rounds}x{args.requests} reqs S∈[{args.min_seq},{args.max_seq}]")
+        for rnd in range(args.rounds):
+            reqs = make_traffic(cfg, args.requests, args.min_seq, args.max_seq, rng)
+            t0 = time.perf_counter()
+            out = engine.explain(reqs)
+            wall = time.perf_counter() - t0
+            deltas = [o["delta"] for o in out]
+            print(f" round {rnd}: wall={wall:.2f}s mean_delta={np.mean(deltas):.5f} "
+                  f"max_delta={np.max(deltas):.5f}")
+        report(engine)
     top = np.argsort(-np.abs(out[0]["token_scores"]))[:5]
-    print("top-5 attributed positions (req 0):", top)
+    print("top-5 attributed positions (last round, req 0):", top)
     return 0
 
 

@@ -73,6 +73,23 @@ class Model:
 
         return f
 
+    def target_logprob_at_fn(self, params):
+        """Per-example-position variant for shape-bucketed serving.
+
+        Returns f(embeds, aux) -> (B,) with aux = {"target": (B,) token ids,
+        "pos": (B,) position of each example's last REAL token}. Right-padded
+        batches read their logits at pos = len-1, so a causal model produces
+        the same value as the unpadded forward.
+        """
+
+        def f(e: jax.Array, aux: dict) -> jax.Array:
+            h, _ = lm.hidden_from_embeds(self.cfg, params, e)
+            rows = jnp.arange(e.shape[0])
+            lg = lm.logits(self.cfg, params, h[rows, aux["pos"]]).astype(jnp.float32)
+            return jax.nn.log_softmax(lg, axis=-1)[rows, aux["target"]]
+
+        return f
+
 
 def input_specs(cfg: ArchConfig, shape: ShapeConfig, *, kv_slots: int = 0) -> dict:
     """ShapeDtypeStruct stand-ins for the step lowered by the dry-run."""

@@ -2,6 +2,7 @@ from repro.roofline.analyze import (
     HW_V5E,
     Hardware,
     RooflineReport,
+    cost_analysis_dict,
     parse_collective_bytes,
     roofline_report,
     model_flops,
@@ -11,6 +12,7 @@ __all__ = [
     "HW_V5E",
     "Hardware",
     "RooflineReport",
+    "cost_analysis_dict",
     "parse_collective_bytes",
     "roofline_report",
     "model_flops",

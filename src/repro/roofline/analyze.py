@@ -63,6 +63,18 @@ COLLECTIVE_OPS = (
 )
 
 
+def cost_analysis_dict(compiled) -> dict:
+    """Normalize ``compiled.cost_analysis()`` across jax versions.
+
+    Older jax returns ``[dict]``, newer returns ``dict``; either may be
+    empty. Always returns a plain dict.
+    """
+    c = compiled.cost_analysis()
+    if isinstance(c, (list, tuple)):
+        c = c[0] if c else {}
+    return dict(c) if c else {}
+
+
 def _shape_bytes(type_str: str) -> int:
     """Bytes of an HLO type string (sums tuple elements)."""
     total = 0

@@ -1,10 +1,18 @@
 from repro.serve.engine import ServeEngine, make_serve_step, make_prefill_step
-from repro.serve.explain_service import ExplainService, ExplainRequest
+from repro.serve.explain_engine import EngineStats, ExplainEngine, ExplainRequest
+from repro.serve.explain_service import ExplainService
+from repro.serve.batching import BucketBatch, bucket_for, plan_buckets, pow2_ladder
 
 __all__ = [
     "ServeEngine",
     "make_serve_step",
     "make_prefill_step",
+    "ExplainEngine",
+    "EngineStats",
     "ExplainService",
     "ExplainRequest",
+    "BucketBatch",
+    "bucket_for",
+    "plan_buckets",
+    "pow2_ladder",
 ]

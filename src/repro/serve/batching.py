@@ -1,0 +1,94 @@
+"""Shape-bucketed request batching for the ExplainEngine (DESIGN.md §6).
+
+Mixed-length prompts cannot share one compiled executable unless their shapes
+agree, and compiling per exact length would recompile on nearly every request.
+The classic serving answer is a *bucket ladder*: right-pad every request's
+token sequence up to the smallest ladder rung ≥ its length (powers of two by
+default), and pad the batch axis up to a batch ladder rung, so steady-state
+traffic touches a small closed set of shapes — each compiled exactly once.
+
+Padding is masked, not free: the plan carries a per-position real-token mask
+that the NUIG pipeline threads through the stage-1 probe and stage-2
+accumulation, so padded positions receive exactly zero attribution and δ is
+computed over real tokens only. Batch-pad rows duplicate a real request (a
+fully-masked row would make the probe degenerate) and are dropped on output.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence
+
+import numpy as np
+
+# Default sequence-bucket ladder: powers of two. Configurable per engine.
+DEFAULT_SEQ_BUCKETS: tuple[int, ...] = (8, 16, 32, 64, 128, 256, 512, 1024)
+# Default batch-bucket ladder: keeps (B, S) — not just S — a small closed set.
+DEFAULT_BATCH_BUCKETS: tuple[int, ...] = (1, 2, 4, 8, 16, 32, 64)
+
+
+def pow2_ladder(max_size: int, *, start: int = 8) -> tuple[int, ...]:
+    """Powers-of-two rungs start, 2·start, ... up to ≥ max_size."""
+    out = [start]
+    while out[-1] < max_size:
+        out.append(out[-1] * 2)
+    return tuple(out)
+
+
+def bucket_for(size: int, ladder: Sequence[int]) -> int:
+    """Smallest ladder rung ≥ size."""
+    for b in ladder:
+        if size <= b:
+            return b
+    raise ValueError(f"size {size} exceeds bucket ladder max {max(ladder)}")
+
+
+class BucketBatch(NamedTuple):
+    """One padded, maskable batch of same-bucket requests."""
+
+    bucket: tuple[int, int]  # (B_padded, S_padded) — the compile-cache shape
+    indices: tuple[int, ...]  # request-list positions of the real rows
+    tokens: np.ndarray  # (B, S) int32, right-padded with pad_id
+    lens: np.ndarray  # (B,) int32 true lengths (pad rows repeat a real row)
+    targets: np.ndarray  # (B,) int32
+    mask: np.ndarray  # (B, S) float32, 1.0 on real tokens
+
+
+def plan_buckets(
+    requests: Sequence,
+    *,
+    seq_buckets: Sequence[int] = DEFAULT_SEQ_BUCKETS,
+    batch_buckets: Optional[Sequence[int]] = DEFAULT_BATCH_BUCKETS,
+    max_batch: int = 0,
+    pad_id: int = 0,
+) -> list[BucketBatch]:
+    """Group heterogeneous ExplainRequests into padded shape buckets.
+
+    requests: objects with ``.tokens`` (1-D int array) and ``.target`` (int).
+    max_batch caps real rows per batch (0 = unlimited); batch_buckets=None
+    disables batch-axis padding (B = number of grouped rows).
+    """
+    groups: dict[int, list[int]] = {}
+    for i, r in enumerate(requests):
+        groups.setdefault(bucket_for(len(r.tokens), seq_buckets), []).append(i)
+
+    out: list[BucketBatch] = []
+    for S in sorted(groups):
+        idx = groups[S]
+        step = max_batch if max_batch else len(idx)
+        if batch_buckets:
+            step = min(step, max(batch_buckets))  # never outgrow the ladder
+        for lo in range(0, len(idx), step):
+            rows = idx[lo : lo + step]
+            B = bucket_for(len(rows), batch_buckets) if batch_buckets else len(rows)
+            padded_rows = rows + [rows[-1]] * (B - len(rows))
+            tokens = np.full((B, S), pad_id, np.int32)
+            lens = np.empty((B,), np.int32)
+            targets = np.empty((B,), np.int32)
+            mask = np.zeros((B, S), np.float32)
+            for j, ri in enumerate(padded_rows):
+                t = np.asarray(requests[ri].tokens, np.int32)
+                tokens[j, : len(t)] = t
+                lens[j] = len(t)
+                targets[j] = int(requests[ri].target)
+                mask[j, : len(t)] = 1.0
+            out.append(BucketBatch((B, S), tuple(rows), tokens, lens, targets, mask))
+    return out

@@ -42,6 +42,29 @@ def make_serve_step(cfg: ArchConfig, *, greedy: bool = True) -> Callable:
     return serve_step
 
 
+def make_decode_loop(cfg: ArchConfig) -> Callable:
+    """(params, cache, token (B,1), num_steps) -> tokens (B, num_steps).
+
+    ``lax.scan`` over the serve step: one compiled program per generation
+    length instead of num_steps host round-trips, with the cache carried
+    (and donatable) on-device for the whole loop.
+    """
+    step = make_serve_step(cfg)
+
+    def decode_loop(
+        params: Any, cache: dict, token: jax.Array, num_steps: int
+    ) -> jax.Array:
+        def body(carry, _):
+            tok, cache = carry
+            nxt, cache = step(params, cache, tok)
+            return (nxt, cache), nxt
+
+        _, toks = jax.lax.scan(body, (token, cache), None, length=num_steps)
+        return toks[..., 0].swapaxes(0, 1)  # (n, B, 1) -> (B, n)
+
+    return decode_loop
+
+
 @dataclass
 class ServeEngine:
     """Greedy batched generation over a static cache."""
@@ -53,14 +76,17 @@ class ServeEngine:
 
     def __post_init__(self):
         self._prefill = jax.jit(make_prefill_step(self.cfg, self.max_len, kv_slots=self.kv_slots))
-        self._step = jax.jit(make_serve_step(self.cfg), donate_argnums=(1,))
+        # cache state is donated into the scan — the decode loop reuses the
+        # prefill cache buffers instead of holding both alive
+        self._decode = jax.jit(
+            make_decode_loop(self.cfg), static_argnums=(3,), donate_argnums=(1,)
+        )
 
     def generate(self, batch: dict, num_tokens: int) -> jax.Array:
         """batch: prompt dict -> (B, num_tokens) generated ids (greedy)."""
         logits, cache = self._prefill(self.params, batch)
         tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-        out = [tok]
-        for _ in range(num_tokens - 1):
-            tok, cache = self._step(self.params, cache, tok)
-            out.append(tok)
-        return jnp.concatenate(out, axis=1)
+        if num_tokens <= 1:  # the prefill token is free; scan needs length >= 1
+            return tok
+        rest = self._decode(self.params, cache, tok, num_tokens - 1)
+        return jnp.concatenate([tok, rest], axis=1)

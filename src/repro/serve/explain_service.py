@@ -1,32 +1,20 @@
-"""Batched IG explanation serving — the paper's end product as a service.
+"""Compatibility shim: the historical ExplainService API over ExplainEngine.
 
-A request asks "why did the model predict ``target`` at the end of
-``tokens``?". The service embeds the prompt, runs NUIG in embedding space
-(stage 1 probe + stage 2 attribution, one compiled program each), and
-reduces (pos, d_model) attributions to per-token scores.
-
-This is where the paper's static-stage-2 design pays off on TPU: requests
-are batched and the interpolation-step axis folds into the batch axis, so
-the whole explanation pipeline is data-parallel under pjit.
+The batched-IG serving logic lives in ``repro.serve.explain_engine`` now —
+shape-bucketed batching, masked padding, and the compiled-executable cache.
+This shim keeps the original one-model/one-method constructor and the
+``explain(requests) -> list[dict]`` contract, with one upgrade: requests no
+longer need equal sequence lengths (they are bucketed and masked).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Optional
-
-import jax
-import jax.numpy as jnp
-import numpy as np
+from typing import Any
 
 from repro.configs.base import ArchConfig
-from repro.core.api import Explainer
-from repro.models.registry import Model
+from repro.serve.explain_engine import ExplainEngine, ExplainRequest
 
-
-@dataclass(frozen=True)
-class ExplainRequest:
-    tokens: np.ndarray  # (S,) int32 prompt
-    target: int  # token id whose next-token log-prob is attributed
+__all__ = ["ExplainService", "ExplainRequest"]
 
 
 @dataclass
@@ -37,42 +25,23 @@ class ExplainService:
     m: int = 64
     n_int: int = 4
     chunk: int = 0
-    pad_id: int = 0  # baseline token (see explain())
+    pad_id: int = 0  # baseline token (see ExplainEngine._run_bucket)
 
     def __post_init__(self):
-        self.model = Model(self.cfg)
-        self._f = self.model.target_logprob_fn(self.params)
-        self._explainer = Explainer(
-            self._f, method=self.method, m=self.m, n_int=self.n_int, chunk=self.chunk
+        self._engine = ExplainEngine(
+            self.cfg,
+            self.params,
+            method=self.method,
+            m=self.m,
+            n_int=self.n_int,
+            chunk=self.chunk,
+            pad_id=self.pad_id,
         )
-        self._jitted = jax.jit(self._attribute_batch)
 
-    def _attribute_batch(self, embeds, baseline, targets):
-        return self._explainer.attribute(embeds, baseline, targets)
+    @property
+    def engine(self) -> ExplainEngine:
+        return self._engine
 
     def explain(self, requests: list[ExplainRequest]) -> list[dict]:
-        """Batch the requests (same S), run NUIG, return per-token scores."""
-        S = len(requests[0].tokens)
-        assert all(len(r.tokens) == S for r in requests), "batch requires equal S"
-        tokens = jnp.asarray(np.stack([r.tokens for r in requests]))
-        targets = jnp.asarray([r.target for r in requests], jnp.int32)
-        embeds = self.model.embed_inputs(self.params, {"tokens": tokens})
-        # PAD-token embedding, not zeros: RMSNorm backbones are scale-
-        # invariant through their first norm, so a ray through the origin
-        # has (near-)zero gradient a.e. and completeness can never converge.
-        from repro.core.baselines import pad_embedding
-
-        baseline = pad_embedding(
-            self.params["embed"]["embedding"], embeds, pad_id=self.pad_id
-        )
-        res = self._jitted(embeds, baseline, targets)
-        per_token = np.asarray(res.attributions.sum(-1))  # (B, S)
-        return [
-            {
-                "token_scores": per_token[i],
-                "delta": float(res.delta[i]),
-                "f_x": float(res.f_x[i]),
-                "f_baseline": float(res.f_baseline[i]),
-            }
-            for i in range(len(requests))
-        ]
+        """Bucket the requests (any S), run NUIG, return per-token scores."""
+        return self._engine.explain(requests)

@@ -8,6 +8,8 @@ from repro.sharding.partition import (
     param_shardings,
     batch_spec,
     activation_specs,
+    explain_specs,
+    explain_shardings,
     spec_for_batch_tree,
 )
 from repro.sharding.trees import train_state_specs, cache_specs, to_shardings
@@ -22,6 +24,8 @@ __all__ = [
     "param_shardings",
     "batch_spec",
     "activation_specs",
+    "explain_specs",
+    "explain_shardings",
     "spec_for_batch_tree",
     "train_state_specs",
     "cache_specs",

@@ -153,6 +153,47 @@ def activation_specs(
     }
 
 
+def explain_specs(mesh: Mesh, rules: MeshRules = DEFAULT_RULES) -> tuple:
+    """PartitionSpecs for the ExplainEngine's bucketed stage-2 inputs.
+
+    Stage 2 folds the interpolation-step axis into the request batch inside
+    ``repro.core.ig.attribute`` (the (B·c, S, D) gradient batch), so sharding
+    the leading dim of every engine input — embeds, baseline, aux ids/pos,
+    mask — shards the folded (batch × step) axis across the mesh's data
+    axes; XLA propagates it through the fold. Feature dims stay replicated:
+    the per-position gradient is local to its position.
+
+    Returns the spec tree matching the engine's (embeds, baseline, aux, mask)
+    argument tuple.
+    """
+    b = batch_spec(mesh, rules)
+    bax = b[0] if len(b) else None
+    return (
+        P(bax, None, None),  # embeds (B, S, D)
+        P(bax, None, None),  # baseline (B, S, D)
+        {"target": P(bax), "pos": P(bax)},  # aux (B,)
+        P(bax, None),  # mask (B, S)
+    )
+
+
+def explain_shardings(
+    mesh: Mesh, *, batch: int, rules: MeshRules = DEFAULT_RULES
+) -> Optional[tuple]:
+    """NamedShardings for ``explain_specs``, or None when the bucket's batch
+    does not divide the mesh's data axes (replicate rather than error — small
+    buckets on big meshes)."""
+    axes = [a for a in rules.batch_axes if a in mesh.axis_names]
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    prod = int(np.prod([sizes[a] for a in axes])) if axes else 1
+    if prod <= 1 or batch % prod != 0:
+        return None
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        explain_specs(mesh, rules),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
 def spec_for_batch_tree(batch: Any, mesh: Mesh, rules: MeshRules = DEFAULT_RULES, *, seq_sharded: bool = False) -> Any:
     """PartitionSpec tree matching a batch dict: dim0 = batch, rest replicated.
 

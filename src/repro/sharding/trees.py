@@ -89,7 +89,7 @@ def cache_specs(
         prod = int(np.prod([sizes[a] for a in axes]))
         return dim % prod == 0 and dim >= prod
 
-    return jax.tree.map_with_path(leaf_spec, cache)
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache)
 
 
 def to_shardings(specs: Any, mesh: Mesh) -> Any:

@@ -19,7 +19,7 @@ from repro.configs import ARCHS, reduced
 from repro.configs.base import ShapeConfig
 from repro.launch.cells import build_cell, lower_cell
 from repro.models.common import costing_mode
-from repro.roofline import parse_collective_bytes
+from repro.roofline import cost_analysis_dict, parse_collective_bytes
 
 mesh = jax.make_mesh((2, 4), ("data", "model"))
 out = {}
@@ -35,11 +35,11 @@ for arch, shape, kw in cases:
     with mesh:
         cell = build_cell(cfg, shape, mesh, **kw)
         compiled = lower_cell(cell).compile()
-        cost = dict(compiled.cost_analysis())
+        cost = cost_analysis_dict(compiled)
         with costing_mode():
             kw2 = dict(kw); kw2.pop("microbatches", None)
             cell2 = build_cell(cfg, shape, mesh, **kw2)
-            cost2 = dict(lower_cell(cell2).compile().cost_analysis())
+            cost2 = cost_analysis_dict(lower_cell(cell2).compile())
     out[f"{arch}:{shape.kind}"] = {
         "flops": cost.get("flops", 0),
         "costing_flops": cost2.get("flops", 0),

@@ -1,0 +1,165 @@
+"""ExplainEngine: bucketing/masking correctness + compiled-executable cache.
+
+The three guarantees the serving refactor rests on:
+  (a) mixed-length batches produce attributions identical to per-length
+      unbatched calls — the padding mask changes nothing observable;
+  (b) traffic at an already-seen bucket shape performs zero new compilations
+      (counted by the engine's jit-wrapper compile counter);
+  (c) every registry schedule keeps Σw == 1 and the completeness δ under
+      masking, with exactly zero attribution at masked positions.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.core import schedule
+from repro.core.api import Explainer
+from repro.core.baselines import pad_embedding
+from repro.models.registry import Model
+from repro.serve import ExplainEngine, ExplainRequest
+from repro.serve.batching import bucket_for, plan_buckets, pow2_ladder
+
+KEY = jax.random.PRNGKey(0)
+MIXED_LENS = (9, 17, 24)
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = reduced(ARCHS["llama3-8b"])
+    model = Model(cfg)
+    params = model.init(KEY)
+    return cfg, model, params
+
+
+def _requests(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        ExplainRequest(
+            tokens=rng.integers(1, cfg.vocab_size, s).astype(np.int32),
+            target=int(rng.integers(0, cfg.vocab_size)),
+        )
+        for s in lens
+    ]
+
+
+def _engine(cfg, params, **kw):
+    kw.setdefault("method", "paper")
+    kw.setdefault("m", 8)
+    kw.setdefault("n_int", 4)
+    return ExplainEngine(cfg, params, **kw)
+
+
+# ------------------------------------------------------- (a) mask correctness
+
+
+def test_mixed_length_matches_unbatched(lm):
+    cfg, model, params = lm
+    reqs = _requests(cfg, MIXED_LENS)
+    mixed = _engine(cfg, params).explain(reqs)
+    f = model.target_logprob_fn(params)
+    for i, r in enumerate(reqs):
+        # per-length unbatched engine call (same compiled path, B=1 bucket)
+        single = _engine(cfg, params).explain([r])[0]
+        np.testing.assert_allclose(
+            mixed[i]["token_scores"], single["token_scores"], atol=1e-5
+        )
+        # exact-length jitted reference: no padding, no mask, fixed pos=-1
+        e = model.embed_inputs(params, {"tokens": jnp.asarray(r.tokens)[None]})
+        bl = pad_embedding(params["embed"]["embedding"], e, pad_id=0)
+        ex = Explainer(f, method="paper", m=8, n_int=4)
+        ref = jax.jit(ex.attribute)(e, bl, jnp.asarray([r.target]))
+        np.testing.assert_allclose(
+            mixed[i]["token_scores"],
+            np.asarray(ref.attributions.sum(-1))[0],
+            atol=1e-4,
+        )
+        np.testing.assert_allclose(mixed[i]["delta"], float(ref.delta[0]), atol=1e-4)
+
+
+def test_masked_positions_exactly_zero(lm):
+    cfg, _, params = lm
+    reqs = _requests(cfg, MIXED_LENS, seed=1)
+    out = _engine(cfg, params).explain(reqs, return_raw=True)
+    for r, o in zip(reqs, out):
+        raw = o["raw_token_scores"]
+        assert raw.shape == (o["bucket"][1],)
+        assert np.all(raw[len(r.tokens) :] == 0.0), "padding must attribute 0"
+        assert np.isfinite(o["delta"])
+
+
+# ------------------------------------------------- (b) zero new compilations
+
+
+def test_seen_bucket_never_recompiles(lm):
+    cfg, _, params = lm
+    eng = _engine(cfg, params)
+    eng.explain(_requests(cfg, MIXED_LENS, seed=2))
+    misses_after_warmup = eng.stats.misses
+    assert misses_after_warmup == len(eng.stats.buckets) > 0
+    # fresh requests, same shapes -> pure cache hits, zero compiles
+    eng.explain(_requests(cfg, MIXED_LENS, seed=3))
+    assert eng.stats.misses == misses_after_warmup
+    assert eng.stats.hits == misses_after_warmup
+    assert all(b.compiles == 1 for b in eng.stats.buckets.values())
+    assert eng.stats.hit_rate == 0.5
+
+
+# ------------------------------- (c) registry invariants under masking
+
+
+def quad_f(xs, t):
+    return jnp.sum(xs**2, axis=-1)
+
+
+@pytest.mark.parametrize("name", sorted(schedule.SCHEDULES))
+def test_registry_schedule_masked_invariants(name):
+    x = jax.random.normal(KEY, (3, 8)) + 1.0
+    bl = jnp.zeros_like(x)
+    t = jnp.zeros((3,), jnp.int32)
+    mask = jnp.asarray(np.tril(np.ones((3, 8), np.float32), k=4))  # ragged tail
+    ex = Explainer(quad_f, method=name, m=16, n_int=4)
+    sched = ex.build_schedule(x, bl, t, mask)
+    np.testing.assert_allclose(np.asarray(sched.weights.sum(-1)), 1.0, rtol=1e-4)
+    res = ex.attribute(x, bl, t, mask)
+    attr = np.asarray(res.attributions)
+    assert np.all(attr[np.asarray(mask) == 0.0] == 0.0)
+    assert float(res.delta.max()) < 0.05
+    # δ is over real tokens: completeness against f at the masked input
+    masked_x = jnp.where(mask.astype(bool), x, bl)
+    gap = np.abs(attr.sum(-1) - np.asarray(quad_f(masked_x, t) - quad_f(bl, t)))
+    np.testing.assert_allclose(gap, np.asarray(res.delta), atol=1e-5)
+
+
+# ----------------------------------------------------------- bucket planning
+
+
+def test_bucket_planning():
+    reqs = _requests(type("C", (), {"vocab_size": 64}), (3, 9, 9, 17, 100))
+    plan = plan_buckets(reqs, seq_buckets=(8, 16, 32, 128), batch_buckets=(1, 2, 4))
+    shapes = {bb.bucket for bb in plan}
+    assert shapes == {(1, 8), (2, 16), (1, 32), (1, 128)}
+    for bb in plan:
+        assert bb.tokens.shape == bb.bucket and bb.mask.shape == bb.bucket
+        for row in range(bb.bucket[0]):
+            n = bb.lens[row]
+            assert bb.mask[row, :n].all() and not bb.mask[row, n:].any()
+    served = sorted(i for bb in plan for i in bb.indices)
+    assert served == list(range(len(reqs)))
+
+
+def test_bucket_planning_splits_beyond_batch_ladder():
+    """More same-bucket rows than the batch ladder's top rung -> split, not crash."""
+    reqs = _requests(type("C", (), {"vocab_size": 64}), (7,) * 9)
+    plan = plan_buckets(reqs, seq_buckets=(8,), batch_buckets=(1, 2, 4))
+    assert [bb.bucket for bb in plan] == [(4, 8), (4, 8), (1, 8)]
+    served = sorted(i for bb in plan for i in bb.indices)
+    assert served == list(range(9))
+
+
+def test_ladders():
+    assert pow2_ladder(100) == (8, 16, 32, 64, 128)
+    assert bucket_for(9, (8, 16, 32)) == 16
+    with pytest.raises(ValueError):
+        bucket_for(64, (8, 16, 32))

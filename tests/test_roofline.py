@@ -65,10 +65,12 @@ def test_costing_mode_unrolls_scan_flops():
     x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
     # fresh lambdas: jit caches lowering per function object, and the COSTING
     # flag is read at trace time
-    flops_scan = dict(jax.jit(lambda v: g(v)).lower(x).compile().cost_analysis())["flops"]
+    from repro.roofline import cost_analysis_dict
+
+    flops_scan = cost_analysis_dict(jax.jit(lambda v: g(v)).lower(x).compile())["flops"]
     with costing_mode():
-        flops_unroll = dict(
-            jax.jit(lambda v: g(v)).lower(x).compile().cost_analysis()
+        flops_unroll = cost_analysis_dict(
+            jax.jit(lambda v: g(v)).lower(x).compile()
         )["flops"]
     assert flops_unroll > 6 * flops_scan  # 8 trips vs body-once
 

@@ -134,3 +134,26 @@ def test_spec_for_batch_tree_seq_sharded():
     batch = {"token": jax.ShapeDtypeStruct((1, 524_288), jnp.int32)}
     specs = spec_for_batch_tree(batch, MESH, DEFAULT_RULES, seq_sharded=True)
     assert specs["token"] == P(None, "data")
+
+
+def test_explain_specs_fold_batch_axis():
+    """ExplainEngine inputs: every leading (request-batch) dim on the data
+    axes — that's what shards the folded (batch × step) stage-2 axis."""
+    from repro.sharding import explain_specs
+
+    embeds, baseline, aux, mask = explain_specs(MESH, DEFAULT_RULES)
+    assert embeds == P("data", None, None) and baseline == embeds
+    assert aux["target"] == P("data") and aux["pos"] == P("data")
+    assert mask == P("data", None)
+    e3, _, _, _ = explain_specs(MESH3, DEFAULT_RULES)
+    assert e3[0] == ("pod", "data")  # megabatch spans both data axes
+
+
+def test_explain_shardings_divisibility_fallback():
+    """Indivisible bucket batches replicate (None) instead of erroring; a
+    1-device mesh has nothing to shard over."""
+    from repro.sharding import explain_shardings
+
+    dev = np.asarray(jax.devices()[:1]).reshape(1, 1)
+    mesh1 = Mesh(dev, ("data", "model"))
+    assert explain_shardings(mesh1, batch=8) is None

@@ -21,7 +21,13 @@ from repro.configs import ARCHS, SHAPES_BY_NAME
 from repro.launch.cells import build_cell, lower_cell
 from repro.launch.mesh import make_production_mesh
 from repro.models.common import costing_mode
-from repro.roofline import HW_V5E, model_flops, parse_collective_bytes, roofline_report
+from repro.roofline import (
+    HW_V5E,
+    cost_analysis_dict,
+    model_flops,
+    parse_collective_bytes,
+    roofline_report,
+)
 from repro.roofline.hlo_flops import dot_flops_summary, entry_bytes, entry_bytes_by_op
 
 
@@ -55,7 +61,7 @@ def main():
         cell = build_cell(cfg, shape, mesh, **kw)
         compiled = lower_cell(cell).compile()
     hlo = compiled.as_text()
-    cost = dict(compiled.cost_analysis())
+    cost = cost_analysis_dict(compiled)
     coll = parse_collective_bytes(hlo)
     kb = entry_bytes(hlo)
     rep = roofline_report(
