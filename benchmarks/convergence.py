@@ -6,12 +6,15 @@ Also reproduces the paper's n_int>8 degradation observation.
 """
 from __future__ import annotations
 
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import cnn_prob_fn, eval_batch, load_or_train_cnn
 from repro.core import ig, probes, schedule
+from repro.core.api import Explainer
 
 M_GRID = (16, 24, 32, 48, 64, 96, 128, 192, 256, 384)
 DELTA_GRID = (0.02, 0.015, 0.01, 0.005)
@@ -79,6 +82,110 @@ def run(batch_size: int = 8, m_grid=M_GRID, delta_grid=DELTA_GRID) -> dict:
         print(",".join(row))
 
     return {"m_grid": list(m_grid), "curves": curves, "steps_to_threshold": steps_to}
+
+
+# ---------------------------------------------- adaptive iso-convergence
+
+
+def adaptive_run(
+    batch_size: int = 8,
+    *,
+    tol: float = 1e-2,
+    m0: int = 64,
+    m_max: int = 256,
+    n_int: int = 8,
+    methods=("paper", "warp"),
+    smoke: bool = False,
+) -> dict:
+    """Steps-to-tolerance: δ-feedback adaptive ladder vs fixed-m uniform.
+
+    Fixed-m baseline: the smallest pow-2 rung m where EVERY example meets the
+    per-example relative tolerance δ ≤ tol·|f(x) − f(x′)| costs B·m gradient
+    steps (the whole batch pays the worst example's budget — that is the
+    over-provisioning the adaptive path removes). Adaptive: each example pays
+    the rung it converged at (``info["total_steps"]`` = Σ m_used).
+
+    Each adaptive config runs twice against one executable cache; the second
+    (measured) run must report zero compiles — the CI gate for "ladder hops
+    only ever hit warmed executables". Returns a dict for BENCH_adaptive.json
+    with ``pass`` aggregating the two assertions.
+    """
+    if smoke:
+        batch_size = min(batch_size, 4)
+    params = load_or_train_cnn()
+    f = cnn_prob_fn(params)
+    x, t = eval_batch(batch_size)
+    bl = jnp.zeros_like(x)
+    B = int(x.shape[0])
+    ladder = schedule.m_ladder(m0, m_max)
+
+    # -- fixed-m uniform baseline: smallest rung meeting tol for all
+    # examples. Searched from far below the adaptive base rung so the
+    # baseline is never handicapped by the adaptive ladder's starting point.
+    uniform_m = None
+    uniform_deltas = {}
+    for m in schedule.m_ladder(min(8, m0), m_max):
+        res = ig.attribute(f, x, bl, schedule.uniform(m), t)
+        rel_ok = np.asarray(res.delta) <= tol * np.abs(
+            np.asarray(res.f_x) - np.asarray(res.f_baseline)
+        )
+        uniform_deltas[m] = float(res.delta.mean())
+        if bool(rel_ok.all()):
+            uniform_m = m
+            break
+    uniform_steps = B * uniform_m if uniform_m else None
+
+    out = {
+        "tol": tol,
+        "m0": m0,
+        "m_max": m_max,
+        "batch": B,
+        "ladder": list(ladder),
+        "uniform_fixed_m": uniform_m,
+        "uniform_steps": uniform_steps,
+        "uniform_mean_delta_by_m": uniform_deltas,
+        "methods": {},
+    }
+    print(f"\n== adaptive iso-convergence (tol={tol} rel, ladder {ladder}) ==")
+    print(f"uniform fixed-m baseline: m={uniform_m} -> {uniform_steps} grad steps")
+
+    ok = uniform_steps is not None
+    for method in methods:
+        ex = Explainer(f, method=method, m=m0, n_int=n_int)
+        cache: dict = {}
+        ex.attribute_adaptive(x, bl, t, tol=tol, m_max=m_max, cache=cache)  # warm
+        t0 = time.perf_counter()
+        res, info = ex.attribute_adaptive(x, bl, t, tol=tol, m_max=m_max, cache=cache)
+        wall = time.perf_counter() - t0
+        entry = {
+            "total_steps": info["total_steps"],
+            "probe_forwards": info["probe_forwards"],
+            "m_used": [int(v) for v in info["m_used"]],
+            "hops": [int(v) for v in info["hops"]],
+            "converged": [bool(v) for v in info["converged"]],
+            "mean_delta": float(np.mean(info["delta"])),
+            "warmed_compiles": info["compiles"],  # second run: must be 0
+            "wall_s": wall,
+            "speedup_vs_uniform": (
+                uniform_steps / info["total_steps"] if uniform_steps else None
+            ),
+        }
+        out["methods"][method] = entry
+        speedup = (
+            f"{entry['speedup_vs_uniform']:.2f}x" if entry["speedup_vs_uniform"] else "-"
+        )
+        print(
+            f"adaptive[{method}]: steps={info['total_steps']} "
+            f"(+{info['probe_forwards']} probe fwds) m_used={entry['m_used']} "
+            f"converged={sum(entry['converged'])}/{B} speedup={speedup}"
+        )
+        ok = ok and all(entry["converged"])
+        ok = ok and entry["warmed_compiles"] == 0
+        ok = ok and (uniform_steps is None or info["total_steps"] < uniform_steps)
+
+    out["pass"] = bool(ok)
+    print(f"adaptive gate: {'PASS' if ok else 'FAIL'}")
+    return out
 
 
 def main():

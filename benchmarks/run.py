@@ -25,7 +25,28 @@ from benchmarks.common import RESULTS_DIR, accuracy, load_or_train_cnn
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true", help="smaller grids (CI)")
+    ap.add_argument(
+        "--adaptive",
+        action="store_true",
+        help="adaptive iso-convergence bench only -> results/BENCH_adaptive.json",
+    )
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="tiny adaptive gate for CI: exit 1 if adaptive loses to fixed-m uniform",
+    )
     args = ap.parse_args()
+
+    if args.adaptive or args.smoke:
+        out = convergence.adaptive_run(
+            batch_size=4 if args.smoke else 8, smoke=args.smoke
+        )
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        path = os.path.join(RESULTS_DIR, "BENCH_adaptive.json")
+        with open(path, "w") as f:
+            json.dump(out, f, indent=1, default=str)
+        print(f"# adaptive bench -> {path}")
+        return 0 if out["pass"] else 1
 
     t0 = time.time()
     params = load_or_train_cnn()

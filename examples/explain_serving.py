@@ -28,6 +28,8 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--seq", type=int, default=24)
     ap.add_argument("--m", type=int, default=32)
+    ap.add_argument("--tol", type=float, default=1e-2,
+                    help="relative δ tolerance for the adaptive demo")
     args = ap.parse_args()
 
     cfg = reduced(ARCHS[args.arch])
@@ -68,6 +70,33 @@ def main():
 
     top = np.argsort(-np.abs(out[0]["token_scores"]))[:5]
     print("top-5 attributed positions (request 0):", top.tolist())
+
+    # tolerance-driven serving (DESIGN.md §7): don't pick m at all — state
+    # the δ you need and let each request climb the m-ladder until it holds.
+    base_m = max(4, args.m // 4)  # paper allocation needs >= n_int steps
+    print(f"\n-- adaptive: tol={args.tol} relative δ, ladder from m={base_m}")
+    svc = ExplainService(
+        cfg, params, method="paper", m=base_m, n_int=4,
+        adaptive=True, tol=args.tol, m_max=max(2 * args.m, 2 * base_m),
+    )
+    svc.explain(reqs)  # warm every ladder executable this traffic touches
+    a = svc.engine.stats.adaptive
+    steps0, exits0, reqs0 = a.total_steps, a.early_exits, a.requests
+    t0 = time.perf_counter()
+    out = svc.explain(reqs)
+    wall = time.perf_counter() - t0
+    for i, o in enumerate(out[:4]):
+        print(
+            f"request {i}: m_used={o['m_used']:<4d} hops={o['hops']} "
+            f"delta={o['delta']:.5f} (threshold {o['threshold']:.5f}) "
+            f"converged={o['converged']}"
+        )
+    steps = a.total_steps - steps0
+    print(
+        f"adaptive wall={wall:.3f}s mean_m_used={steps / (a.requests - reqs0):.1f} "
+        f"early_exits={a.early_exits - exits0}/{a.requests - reqs0} "
+        f"steps={steps} vs fixed-m {args.m}x{len(reqs)}={args.m * len(reqs)}"
+    )
 
 
 if __name__ == "__main__":

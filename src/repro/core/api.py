@@ -13,9 +13,10 @@ from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import ig, probes, schedule
-from repro.core.ig import IGResult
+from repro.core.ig import IGResult, IGState
 from repro.core.probes import ScalarFn
 from repro.core.schedule import Schedule
 
@@ -70,15 +71,220 @@ class Explainer:
         mask: Optional[jax.Array] = None,
     ) -> IGResult:
         sched = self.build_schedule(x, baseline, target, mask)
-        kw = {}
-        if self.interp_fn is not None:
-            kw["interp_fn"] = self.interp_fn
-        if self.accum_fn is not None:
-            kw["accum_fn"] = self.accum_fn
         return ig.attribute(
-            self.f, x, baseline, sched, target, mask=mask, chunk=self.chunk, **kw
+            self.f,
+            x,
+            baseline,
+            sched,
+            target,
+            mask=mask,
+            chunk=self.chunk,
+            **self._ig_kwargs(),
         )
 
     def jitted(self) -> Callable:
         """One compiled end-to-end (stage1 + stage2) explanation step."""
         return jax.jit(self.attribute)
+
+    # -- adaptive iso-convergence (DESIGN.md §7) ---------------------------
+
+    @property
+    def adaptive_chunk(self) -> int:
+        """Stage-2 chunk used by the resumable path. ``chunk=0`` becomes the
+        base rung size ``m`` so every rung's scan boundaries align with a
+        fixed run over the final refined schedule (bit-identity needs the
+        same chunking on both sides)."""
+        c = self.chunk if self.chunk else self.m
+        assert self.m % c == 0, (self.m, c)
+        return c
+
+    def _ig_kwargs(self) -> dict:
+        kw = {}
+        if self.interp_fn is not None:
+            kw["interp_fn"] = self.interp_fn
+        if self.accum_fn is not None:
+            kw["accum_fn"] = self.accum_fn
+        return kw
+
+    def start(
+        self,
+        x: jax.Array,
+        baseline: jax.Array,
+        target: Any,
+        mask: Optional[jax.Array] = None,
+    ) -> tuple[IGResult, IGState, Schedule]:
+        """Rung 0 of the adaptive ladder: probe, build the base schedule,
+        accumulate its m nodes, and return the resumable state plus the
+        materialized schedule (needed to refine later)."""
+        sched = self.build_schedule(x, baseline, target, mask)
+        res, state = ig.attribute(
+            self.f,
+            x,
+            baseline,
+            sched,
+            target,
+            mask=mask,
+            chunk=self.adaptive_chunk,
+            return_state=True,
+            **self._ig_kwargs(),
+        )
+        return res, state, sched
+
+    def resume(
+        self,
+        x: jax.Array,
+        baseline: jax.Array,
+        target: Any,
+        new_nodes: Schedule,
+        state: IGState,
+        mask: Optional[jax.Array] = None,
+    ) -> tuple[IGResult, IGState]:
+        """One ladder hop: accumulate the refined schedule's NEW nodes on top
+        of ``state``. ``state_scale=0.5`` re-expresses the old accumulator in
+        the refined rung's exactly-halved weights."""
+        res, state = ig.attribute(
+            self.f,
+            x,
+            baseline,
+            new_nodes,
+            target,
+            mask=mask,
+            chunk=self.adaptive_chunk,
+            state=state,
+            state_scale=0.5,
+            return_state=True,
+            **self._ig_kwargs(),
+        )
+        return res, state
+
+    def attribute_adaptive(
+        self,
+        x: jax.Array,
+        baseline: jax.Array,
+        target: Any,
+        *,
+        tol: float = 1e-2,
+        m_max: int = 0,
+        mask: Optional[jax.Array] = None,
+        cache: Optional[dict] = None,
+    ) -> tuple[IGResult, dict]:
+        """δ-feedback early-exit attribution up the m-ladder.
+
+        Runs the base rung (``self.m`` nodes), then repeatedly refines the
+        schedule (nested doubling — no prior gradient is discarded) and
+        resumes accumulation for the examples whose completeness gap still
+        exceeds ``tol · |f(x) − f(x′)|``, until all converge or the ladder
+        tops out at ``m_max`` (default ``8·m``). Converged examples exit
+        with the rung they converged at; their rows are excluded from later
+        hops (the serving engine additionally re-buckets survivors — here
+        rows are simply gathered, so each distinct (active-count, rung)
+        shape compiles once into ``cache``).
+
+        Returns ``(IGResult, info)``: per-example final attributions/δ, and
+        ``info`` with per-example ``m_used``/``hops``/``delta``/``threshold``
+        /``converged`` plus aggregate ``total_steps`` (Σ m_used — the
+        iso-convergence metric), ``probe_forwards``, ``compiles``, and the
+        ``ladder``. Pass the same ``cache`` dict across calls to reuse the
+        AOT-compiled rung executables (zero recompiles at steady state).
+        """
+        fam = schedule.family(self.method)
+        ladder = schedule.m_ladder(self.m, m_max if m_max else 8 * self.m)
+        cache = cache if cache is not None else {}
+        compiles = 0
+        B = x.shape[0]
+
+        def aot(key, fn, args):
+            nonlocal compiles
+            ex = cache.get(key)
+            if ex is None:
+                sds = jax.tree.map(
+                    lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), args
+                )
+                ex = jax.jit(fn).lower(*sds).compile()
+                cache[key] = ex
+                compiles += 1
+            return ex
+
+        # cache keys carry the explainer config AND input signature (dtype,
+        # target pytree structure): a cache dict shared across calls must
+        # never hand back an incompatible compiled program
+        cfg_key = (
+            self.method,
+            self.m,
+            self.n_int,
+            self.adaptive_chunk,
+            str(x.dtype),
+            jax.tree.structure(target),
+        )
+        has_mask = mask is not None
+        args = (x, baseline, target, mask)
+        res, state, sched = aot(
+            ("start", cfg_key, x.shape, has_mask), self.start, args
+        )(*args)
+
+        delta = np.asarray(res.delta).copy()
+        f_x, f_b = np.asarray(res.f_x), np.asarray(res.f_baseline)
+        threshold = tol * np.abs(f_x - f_b)
+        out_attr = np.asarray(res.attributions).copy()
+        m_used = np.full((B,), ladder[0], np.int64)
+        hops = np.zeros((B,), np.int64)
+        total_steps = B * ladder[0]
+
+        act = np.flatnonzero(delta > threshold)
+        # per-example schedules for the survivors (uniform builds a shared
+        # (m,) schedule — broadcast so rows can be gathered independently)
+        bcast = lambda v: np.broadcast_to(np.asarray(v), (B, np.shape(v)[-1]))
+        a_act, w_act = bcast(sched.alphas)[act], bcast(sched.weights)[act]
+        acc_act = np.asarray(state.acc)[act]
+        tgt_np = jax.tree.map(np.asarray, target)
+        mask_np = np.asarray(mask) if has_mask else None
+
+        for rung in ladder[1:]:
+            if act.size == 0:
+                break
+            n_new = rung // 2
+            refined = fam.refine(Schedule(jnp.asarray(a_act), jnp.asarray(w_act)))
+            ra, rw = np.asarray(refined.alphas), np.asarray(refined.weights)
+            new_sched = Schedule(jnp.asarray(ra[:, n_new:]), jnp.asarray(rw[:, n_new:]))
+            hop_args = (
+                np.asarray(x)[act],
+                np.asarray(baseline)[act],
+                jax.tree.map(lambda t: t[act], tgt_np),
+                new_sched,
+                IGState(acc_act, f_x[act], f_b[act]),
+                mask_np[act] if has_mask else None,
+            )
+            ex = aot(
+                ("hop", cfg_key, act.size, n_new, x.shape[1:], has_mask),
+                self.resume,
+                hop_args,
+            )
+            res2, st2 = ex(*hop_args)
+            total_steps += act.size * n_new
+            d2 = np.asarray(res2.delta)
+            out_attr[act] = np.asarray(res2.attributions)
+            delta[act] = d2
+            m_used[act] = rung
+            hops[act] += 1
+            keep = d2 > threshold[act]
+            act = act[keep]
+            a_act, w_act = ra[keep], rw[keep]
+            acc_act = np.asarray(st2.acc)[keep]
+
+        final = IGResult(
+            jnp.asarray(out_attr), res.f_x, res.f_baseline, jnp.asarray(delta)
+        )
+        info = {
+            "m_used": m_used,
+            "hops": hops,
+            "delta": delta,
+            "threshold": threshold,
+            "converged": delta <= threshold,
+            "total_steps": int(total_steps),
+            "probe_forwards": B
+            * probes.probe_cost(fam.probe, n_int=self.n_int, rounds=self.refine_rounds),
+            "compiles": compiles,
+            "ladder": ladder,
+            "chunk": self.adaptive_chunk,
+        }
+        return final, info

@@ -35,6 +35,20 @@ class IGResult(NamedTuple):
     delta: jax.Array  # (B,) convergence δ (completeness gap, Eq. 3)
 
 
+class IGState(NamedTuple):
+    """Resumable stage-2 accumulator (adaptive iso-convergence, DESIGN.md §7).
+
+    ``acc`` is Σ_k w_k g_k at the rung last run — the path integral estimate
+    *before* the (x − x′) factor — and ``f_x``/``f_baseline`` are the endpoint
+    forwards, computed once at rung 0 and carried so ladder hops never repeat
+    them. Rows may be gathered/re-batched freely: every field is per-example.
+    """
+
+    acc: jax.Array  # (B, *F) float32 running Σ w·g
+    f_x: jax.Array  # (B,)
+    f_baseline: jax.Array  # (B,)
+
+
 def _expand_mask(mask: jax.Array, ndim: int, *, lead: int = 1) -> jax.Array:
     """(B, *L) -> (B, 1×(lead-1), *L, 1, ...) broadcastable to rank ``ndim``."""
     shape = mask.shape[:1] + (1,) * (lead - 1) + mask.shape[1:]
@@ -67,7 +81,10 @@ def attribute(
     chunk: int = 0,
     interp_fn: Callable = interpolate,
     accum_fn: Callable = _default_accum,
-) -> IGResult:
+    state: Optional[IGState] = None,
+    state_scale: float = 1.0,
+    return_state: bool = False,
+):
     """Integrated Gradients along the straight-line path with any schedule.
 
     f: (xs (N, *F), targets) -> (N,);  x/baseline: (B, *F).
@@ -75,6 +92,15 @@ def attribute(
     {"target": ids, "pos": positions} for bucketed serving).
     sched.alphas/weights: (m,) shared or (B, m) per-example.
     mask: optional (B, *L) real-position mask, L a prefix of the feature dims.
+
+    Resumability (DESIGN.md §7): pass ``state`` from a prior call to continue
+    accumulating — ``sched`` then holds only the NEW nodes, the endpoint
+    forwards are reused, and the prior accumulator enters scaled by
+    ``state_scale`` (0.5 per nested-refinement doubling: the old nodes'
+    weights in the refined schedule are exactly half their old values, and
+    power-of-two scaling is exact, so resuming is bit-identical to one fixed
+    run over the full refined schedule at the same ``chunk``). With
+    ``return_state`` the call returns ``(IGResult, IGState)``.
     """
     B = x.shape[0]
     # pinned view for the endpoint terms; the scan's interpolants are pinned
@@ -102,16 +128,27 @@ def attribute(
         g = grad_f(flat, t).reshape((B, c) + x.shape[1:])
         return accum_fn(acc, g, w, **mkw), None
 
-    acc0 = jnp.zeros_like(x, dtype=jnp.float32)
+    if state is None:
+        acc0 = jnp.zeros_like(x, dtype=jnp.float32)
+    else:
+        acc0 = state.acc.astype(jnp.float32)
+        if state_scale != 1.0:
+            acc0 = acc0 * jnp.float32(state_scale)
     acc, _ = jax.lax.scan(step, acc0, (a_ch, w_ch))
     attr = (xp - baseline).astype(jnp.float32) * acc
     if mask is not None:
         attr = attr * _expand_mask(mask, attr.ndim)
 
-    both = jnp.concatenate([xp, baseline], axis=0)
-    fv = f(both, jax.tree.map(lambda t: jnp.concatenate([t, t], axis=0), target))
-    f_x, f_b = fv[:B], fv[B:]
+    if state is None:
+        both = jnp.concatenate([xp, baseline], axis=0)
+        fv = f(both, jax.tree.map(lambda t: jnp.concatenate([t, t], axis=0), target))
+        f_x, f_b = fv[:B], fv[B:]
+    else:
+        f_x, f_b = state.f_x, state.f_baseline
     # attr is exactly zero at masked positions, so the full sum IS the
     # real-token sum — δ measures completeness over real tokens only.
     delta = jnp.abs(attr.reshape(B, -1).sum(-1) - (f_x - f_b))
-    return IGResult(attr, f_x, f_b, delta)
+    res = IGResult(attr, f_x, f_b, delta)
+    if return_state:
+        return res, IGState(acc, f_x, f_b)
+    return res

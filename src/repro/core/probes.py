@@ -96,6 +96,22 @@ def refined_boundaries(
     return b, v
 
 
+def probe_cost(kind: str, *, n_int: int = 4, rounds: int = 4) -> int:
+    """Forward passes a probe kind spends per example (0 gradient steps).
+
+    The adaptive serving path reports steps-to-tolerance; probe forwards are
+    the paper's 0.2–3.2% stage-1 overhead and are accounted separately from
+    gradient steps (a forward is roughly a third of a forward+backward).
+    """
+    if kind == "none":
+        return 0
+    if kind == "boundary":
+        return n_int + 1
+    if kind == "refine":
+        return n_int + 1 + rounds
+    raise ValueError(f"unknown probe kind {kind!r}")
+
+
 def run_probe(
     kind: str,
     f: ScalarFn,

@@ -44,6 +44,22 @@ def report(engine: ExplainEngine) -> None:
             f"reqs={b.requests:<4d} compile={b.compile_s:.2f}s "
             f"mean_latency={1e3 * b.mean_latency_s:.1f}ms"
         )
+    for shape in sorted(st.hop_buckets):
+        b = st.hop_buckets[shape]
+        print(
+            f"  hop    B={shape[0]:<3d} S={shape[1]:<5d} calls={b.calls:<3d} "
+            f"{'':9s} compile={b.compile_s:.2f}s "
+            f"mean_latency={1e3 * b.mean_latency_s:.1f}ms"
+        )
+    a = st.adaptive
+    if a.requests:
+        print(
+            f"  adaptive: ladder={engine.m_ladder} converged={a.converged}/{a.requests} "
+            f"early_exits={a.early_exits} hops={a.hop_calls} "
+            f"mean_m_used={a.mean_m_used:.1f} steps={a.total_steps} "
+            f"(launched {a.launched_steps} incl. pad) probe_fwd={a.probe_forwards}"
+        )
+        print(f"  m_used histogram: {dict(sorted(a.m_used.items()))}")
 
 
 def main() -> int:
@@ -57,6 +73,13 @@ def main() -> int:
     ap.add_argument("--min-seq", type=int, default=9)
     ap.add_argument("--max-seq", type=int, default=48)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--adaptive",
+        action="store_true",
+        help="δ-feedback early-exit: escalate unconverged requests up the m-ladder",
+    )
+    ap.add_argument("--tol", type=float, default=1e-2, help="relative δ tolerance")
+    ap.add_argument("--m-max", type=int, default=0, help="ladder top (default 8·m)")
     args = ap.parse_args()
 
     cfg = reduced(get_config(args.arch))
@@ -68,8 +91,18 @@ def main() -> int:
 
     out = None
     for method in (args.method, "uniform"):
-        engine = ExplainEngine(cfg, params, method=method, m=args.m, n_int=args.n_int)
-        print(f"method={method} m={args.m} "
+        engine = ExplainEngine(
+            cfg,
+            params,
+            method=method,
+            m=args.m,
+            n_int=args.n_int,
+            adaptive=args.adaptive,
+            tol=args.tol,
+            m_max=args.m_max,
+        )
+        mode = f"adaptive tol={args.tol} ladder={engine.m_ladder}" if args.adaptive else f"m={args.m}"
+        print(f"method={method} {mode} "
               f"traffic={args.rounds}x{args.requests} reqs S∈[{args.min_seq},{args.max_seq}]")
         for rnd in range(args.rounds):
             reqs = make_traffic(cfg, args.requests, args.min_seq, args.max_seq, rng)
@@ -77,8 +110,12 @@ def main() -> int:
             out = engine.explain(reqs)
             wall = time.perf_counter() - t0
             deltas = [o["delta"] for o in out]
-            print(f" round {rnd}: wall={wall:.2f}s mean_delta={np.mean(deltas):.5f} "
-                  f"max_delta={np.max(deltas):.5f}")
+            line = (f" round {rnd}: wall={wall:.2f}s mean_delta={np.mean(deltas):.5f} "
+                    f"max_delta={np.max(deltas):.5f}")
+            if args.adaptive:
+                line += (f" mean_m_used={np.mean([o['m_used'] for o in out]):.1f}"
+                         f" conv={sum(o['converged'] for o in out)}/{len(out)}")
+            print(line)
         report(engine)
     top = np.argsort(-np.abs(out[0]["token_scores"]))[:5]
     print("top-5 attributed positions (last round, req 0):", top)

@@ -41,6 +41,25 @@ def bucket_for(size: int, ladder: Sequence[int]) -> int:
     raise ValueError(f"size {size} exceeds bucket ladder max {max(ladder)}")
 
 
+def pad_rows(
+    rows: Sequence[int], batch_buckets: Optional[Sequence[int]]
+) -> tuple[list[int], int]:
+    """Pad a row-index list up the batch ladder by repeating the last row.
+
+    The adaptive escalation path re-batches still-unconverged rows mid-flight
+    (DESIGN.md §7); padding them to a ladder rung keeps hop executables on
+    the same closed (B, S) shape set as plan-time batches. Pad slots repeat a
+    real row (same reason as ``plan_buckets``: a fully-masked row would make
+    the δ check degenerate) and are dropped on output.
+
+    Returns ``(padded_rows, B)`` with ``padded_rows[:len(rows)] == rows``.
+    """
+    rows = list(rows)
+    assert rows, "pad_rows needs at least one row"
+    B = bucket_for(len(rows), batch_buckets) if batch_buckets else len(rows)
+    return rows + [rows[-1]] * (B - len(rows)), B
+
+
 class BucketBatch(NamedTuple):
     """One padded, maskable batch of same-bucket requests."""
 
@@ -78,8 +97,7 @@ def plan_buckets(
             step = min(step, max(batch_buckets))  # never outgrow the ladder
         for lo in range(0, len(idx), step):
             rows = idx[lo : lo + step]
-            B = bucket_for(len(rows), batch_buckets) if batch_buckets else len(rows)
-            padded_rows = rows + [rows[-1]] * (B - len(rows))
+            padded_rows, B = pad_rows(rows, batch_buckets)
             tokens = np.full((B, S), pad_id, np.int32)
             lens = np.empty((B,), np.int32)
             targets = np.empty((B,), np.int32)

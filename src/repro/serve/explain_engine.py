@@ -18,6 +18,17 @@ hot compiled program. This engine makes that true under real traffic:
   * an optional mesh shards the folded (batch × step) stage-2 axis via the
     pjit specs in ``repro.sharding`` (``explain_shardings``).
 
+**Adaptive iso-convergence** (``adaptive=True``, DESIGN.md §7): ``m`` becomes
+the base rung of a pow-2 m-ladder instead of a fixed budget. Each bucket runs
+rung 0 (probe + base schedule + resumable accumulation), then examples whose
+completeness gap δ still exceeds ``tol · |f(x) − f(x′)|`` are re-batched
+together and escalated: their schedules are refined (nested doubling — prior
+gradients are never discarded, see ``schedule.refine_nested``) and only the
+NEW nodes run, through "hop" executables keyed on ``(bucket, n_new, chunk)``
+— method-independent, because schedules are data. Ladder hops therefore only
+ever touch the same closed set of warmed shapes as fixed-m serving: zero
+recompiles at steady state, per-request shapes never exist.
+
 ``ExplainService`` remains as a thin compatibility shim over this engine.
 """
 from __future__ import annotations
@@ -31,13 +42,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core import ig
 from repro.core.api import Explainer
 from repro.core.baselines import pad_embedding
+from repro.core.probes import probe_cost
+from repro.core.schedule import Schedule, family, m_ladder
 from repro.models.registry import Model
 from repro.serve.batching import (
     DEFAULT_BATCH_BUCKETS,
     DEFAULT_SEQ_BUCKETS,
     BucketBatch,
+    pad_rows,
     plan_buckets,
 )
 
@@ -62,10 +77,34 @@ class BucketStats:
 
 
 @dataclass
+class AdaptiveStats:
+    """Aggregate δ-feedback serving counters (per-request values ride on the
+    result dicts: ``m_used``, ``delta``, ``hops``, ``converged``)."""
+
+    requests: int = 0  # requests served adaptively
+    converged: int = 0  # requests that reached δ ≤ tol·|f_x − f_b|
+    early_exits: int = 0  # requests that converged below the ladder top
+    hop_calls: int = 0  # escalation batches launched
+    total_steps: int = 0  # Σ per-request m_used (iso-convergence metric)
+    launched_steps: int = 0  # actual grad steps incl. batch-pad rows
+    probe_forwards: int = 0  # stage-1 forwards (not gradient steps)
+    m_used: dict = field(default_factory=dict)  # final rung -> request count
+
+    @property
+    def mean_m_used(self) -> float:
+        return self.total_steps / self.requests if self.requests else 0.0
+
+
+@dataclass
 class EngineStats:
     hits: int = 0  # executable-cache hits
     misses: int = 0  # executable-cache misses == compilations
     buckets: dict = field(default_factory=dict)  # (B, S) -> BucketStats
+    # hop executables get their own table: a hop at a plan-bucket shape does
+    # different work per call (n_new new nodes, no probe/endpoints), so
+    # folding it into `buckets` would corrupt per-bucket serving latency
+    hop_buckets: dict = field(default_factory=dict)  # (B, S) -> BucketStats
+    adaptive: AdaptiveStats = field(default_factory=AdaptiveStats)
 
     @property
     def hit_rate(self) -> float:
@@ -74,6 +113,15 @@ class EngineStats:
 
     def bucket(self, shape: tuple[int, int]) -> BucketStats:
         return self.buckets.setdefault(shape, BucketStats())
+
+    def hop_bucket(self, shape: tuple[int, int]) -> BucketStats:
+        return self.hop_buckets.setdefault(shape, BucketStats())
+
+    @property
+    def compiles(self) -> int:
+        return sum(
+            b.compiles for d in (self.buckets, self.hop_buckets) for b in d.values()
+        )
 
 
 class ExplainEngine:
@@ -95,6 +143,9 @@ class ExplainEngine:
         batch_buckets: Optional[Sequence[int]] = DEFAULT_BATCH_BUCKETS,
         max_batch: int = 0,
         mesh: Optional[jax.sharding.Mesh] = None,
+        adaptive: bool = False,
+        tol: float = 1e-2,
+        m_max: int = 0,
     ):
         self.cfg = cfg
         self.params = params
@@ -107,6 +158,10 @@ class ExplainEngine:
         self.batch_buckets = tuple(batch_buckets) if batch_buckets else None
         self.max_batch = max_batch
         self.mesh = mesh
+        self.adaptive = adaptive
+        self.tol = tol
+        self.m_max = m_max if m_max else (8 * m if adaptive else m)
+        self.m_ladder = m_ladder(m, self.m_max)
         self.model = Model(cfg)
         self.stats = EngineStats()
         self._cache: dict[tuple, Any] = {}  # key -> compiled executable
@@ -128,11 +183,34 @@ class ExplainEngine:
     def _attr_fn(self, embeds, baseline, aux, mask):
         return self._explainer.attribute(embeds, baseline, aux, mask=mask)
 
-    def _executable(self, bucket: tuple[int, int], args: tuple) -> Any:
-        """AOT-compiled stage1+stage2 program for one bucket shape."""
-        key = self._key(bucket)
+    def _start_fn(self, embeds, baseline, aux, mask):
+        """Adaptive rung 0: fused probe + base schedule + resumable stage 2.
+
+        Returns the materialized per-example schedule too — the host needs it
+        to refine on escalation (uniform's shared (m,) schedule is broadcast
+        so survivor rows can be gathered independently)."""
+        res, state, sched = self._explainer.start(embeds, baseline, aux, mask=mask)
+        B = embeds.shape[0]
+        sched = Schedule(
+            jnp.broadcast_to(sched.alphas, (B, sched.alphas.shape[-1])),
+            jnp.broadcast_to(sched.weights, (B, sched.weights.shape[-1])),
+        )
+        return res, state, sched
+
+    def _hop_fn(self, embeds, baseline, aux, mask, new_nodes, state):
+        """One ladder hop: stage 2 over the refined schedule's new nodes only
+        (method-independent — the schedule arrives as runtime data)."""
+        return self._explainer.resume(
+            embeds, baseline, aux, new_nodes, state, mask=mask
+        )
+
+    def _executable(self, key: tuple, bs: BucketStats, fn, args: tuple) -> Any:
+        """AOT-compiled program for one cache key (bucket shape + phase).
+
+        ``bs`` is the stats row (plan bucket or hop bucket) that the compile
+        time is charged to; the batch size for sharding comes from ``args``.
+        """
         hit = key in self._cache
-        bs = self.stats.bucket(bucket)
         if hit:
             self.stats.hits += 1
             return self._cache[key]
@@ -140,21 +218,23 @@ class ExplainEngine:
         bs.compiles += 1
         t0 = time.perf_counter()
         jit_kw = {}
-        if self.mesh is not None:
+        # hop args carry extra leaves (schedule, state) beyond the 4-arg
+        # spec tree that explain_shardings describes — replicate those
+        if self.mesh is not None and fn in (self._attr_fn, self._start_fn):
             from repro.sharding import explain_shardings
 
-            shardings = explain_shardings(self.mesh, batch=bucket[0])
+            shardings = explain_shardings(self.mesh, batch=args[0].shape[0])
             if shardings is not None:
                 jit_kw["in_shardings"] = shardings
         sds = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), args)
-        compiled = jax.jit(self._attr_fn, **jit_kw).lower(*sds).compile()
+        compiled = jax.jit(fn, **jit_kw).lower(*sds).compile()
         bs.compile_s += time.perf_counter() - t0
         self._cache[key] = compiled
         return compiled
 
     # -- serving -----------------------------------------------------------
 
-    def _run_bucket(self, bb: BucketBatch) -> Any:
+    def _bucket_inputs(self, bb: BucketBatch) -> tuple:
         tokens = jnp.asarray(bb.tokens)
         aux = {
             "target": jnp.asarray(bb.targets, jnp.int32),
@@ -168,16 +248,138 @@ class ExplainEngine:
         baseline = pad_embedding(
             self.params["embed"]["embedding"], embeds, pad_id=self.pad_id
         )
-        args = (embeds, baseline, aux, mask)
-        fn = self._executable(bb.bucket, args)
+        return embeds, baseline, aux, mask
+
+    def _run_bucket(self, bb: BucketBatch) -> Any:
+        args = self._bucket_inputs(bb)
         bs = self.stats.bucket(bb.bucket)
-        t0 = time.perf_counter()
-        res = fn(*args)
-        res = jax.block_until_ready(res)
-        bs.total_s += time.perf_counter() - t0
-        bs.calls += 1
+        fn = self._executable(self._key(bb.bucket), bs, self._attr_fn, args)
+        res = self._timed_call(bs, fn, args)
         bs.requests += len(bb.indices)
         return res
+
+    def _timed_call(self, bs: BucketStats, fn, args: tuple) -> Any:
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(fn(*args))
+        bs.total_s += time.perf_counter() - t0
+        bs.calls += 1
+        return out
+
+    def _run_bucket_adaptive(self, bb: BucketBatch) -> list[dict]:
+        """δ-feedback serving for one bucket: rung 0, then escalate survivors.
+
+        Returns one result dict per real request in ``bb.indices`` order.
+        Escalation re-batches still-unconverged rows together (batch axis
+        padded up the batch ladder by duplicating a survivor, as at plan
+        time) and runs ONLY the refined schedule's new nodes through hop
+        executables keyed ``("hop", (B', S), n_new, chunk)`` — a closed shape
+        set, so steady-state adaptive traffic never recompiles.
+        """
+        S = bb.bucket[1]
+        chunk = self._explainer.adaptive_chunk
+        args = self._bucket_inputs(bb)
+        key = ("start", bb.bucket, self.method, self.m, self.n_int, chunk)
+        bs = self.stats.bucket(bb.bucket)
+        fn = self._executable(key, bs, self._start_fn, args)
+        res, state, sched = self._timed_call(bs, fn, args)
+        bs.requests += len(bb.indices)
+
+        n_real = len(bb.indices)
+        ast = self.stats.adaptive
+        ast.requests += n_real
+        ast.total_steps += n_real * self.m
+        ast.launched_steps += bb.bucket[0] * self.m
+        # per-real-request like total_steps (pad-row forwards are launch
+        # overhead, visible via launched_steps' bucket padding instead)
+        ast.probe_forwards += n_real * probe_cost(
+            family(self.method).probe,
+            n_int=self.n_int,
+            rounds=self._explainer.refine_rounds,
+        )
+
+        embeds, baseline, aux, mask = (np.asarray(a) if not isinstance(a, dict)
+                                       else {k: np.asarray(v) for k, v in a.items()}
+                                       for a in args)
+        delta = np.asarray(res.delta).copy()
+        threshold = self.tol * np.abs(np.asarray(res.f_x) - np.asarray(res.f_baseline))
+        per_token = np.asarray(res.attributions.sum(-1)).copy()  # (B, S)
+        f_x = np.asarray(res.f_x)
+        f_b = np.asarray(res.f_baseline)
+        m_used = np.full((bb.bucket[0],), self.m, np.int64)
+        hops = np.zeros((bb.bucket[0],), np.int64)
+
+        # survivors: real rows whose δ still exceeds tol·|f_x − f_b|
+        act = [r for r in range(n_real) if delta[r] > threshold[r]]
+        a_act = np.asarray(sched.alphas)[act]
+        w_act = np.asarray(sched.weights)[act]
+        acc_act = np.asarray(state.acc)[act]
+
+        for rung in self.m_ladder[1:]:
+            if not act:
+                break
+            n_new = rung // 2
+            refined = family(self.method).refine(
+                Schedule(jnp.asarray(a_act), jnp.asarray(w_act))
+            )
+            ra, rw = np.asarray(refined.alphas), np.asarray(refined.weights)
+            rows, B2 = pad_rows(act, self.batch_buckets)
+            # schedule/state slot per padded row: pad_rows keeps act as a
+            # prefix and repeats the last real row into the pad slots
+            pad_sel = list(range(len(act))) + [len(act) - 1] * (B2 - len(act))
+            hop_bucket = (B2, S)
+            hop_args = (
+                embeds[rows],
+                baseline[rows],
+                {k: v[rows] for k, v in aux.items()},
+                mask[rows],
+                Schedule(ra[pad_sel, n_new:], rw[pad_sel, n_new:]),
+                ig.IGState(acc_act[pad_sel], f_x[rows], f_b[rows]),
+            )
+            hop_key = ("hop", hop_bucket, n_new, chunk)
+            hbs = self.stats.hop_bucket(hop_bucket)
+            hop = self._executable(hop_key, hbs, self._hop_fn, hop_args)
+            res2, st2 = self._timed_call(hbs, hop, hop_args)
+            ast.hop_calls += 1
+            ast.launched_steps += B2 * n_new
+            ast.total_steps += len(act) * n_new
+
+            d2 = np.asarray(res2.delta)
+            pt2 = np.asarray(res2.attributions.sum(-1))
+            acc2 = np.asarray(st2.acc)
+            keep = []
+            for slot, r in enumerate(act):  # real survivors occupy slots [0, len(act))
+                delta[r] = d2[slot]
+                per_token[r] = pt2[slot]
+                m_used[r] = rung
+                hops[r] += 1
+                if d2[slot] > threshold[r]:
+                    keep.append(slot)
+            act = [act[s] for s in keep]
+            a_act, w_act = ra[keep], rw[keep]
+            acc_act = acc2[keep]
+
+        out = []
+        for row, ri in enumerate(bb.indices):
+            converged = bool(delta[row] <= threshold[row])
+            ast.converged += converged
+            ast.early_exits += converged and int(m_used[row]) < self.m_ladder[-1]
+            ast.m_used[int(m_used[row])] = ast.m_used.get(int(m_used[row]), 0) + 1
+            out.append(
+                {
+                    "request": ri,
+                    "token_scores": per_token[row, : bb.lens[row]],
+                    "raw_token_scores": per_token[row],
+                    "delta": float(delta[row]),
+                    "threshold": float(threshold[row]),
+                    "f_x": float(f_x[row]),
+                    "f_baseline": float(f_b[row]),
+                    "bucket": bb.bucket,
+                    "m_used": int(m_used[row]),
+                    "hops": int(hops[row]),
+                    "converged": converged,
+                }
+            )
+        return out
 
     def explain(
         self, requests: Sequence[ExplainRequest], *, return_raw: bool = False
@@ -186,7 +388,10 @@ class ExplainEngine:
 
         Each result dict: token_scores (S_req,), delta, f_x, f_baseline,
         bucket (B, S); with ``return_raw`` also raw_token_scores (S_bucket,)
-        — the untrimmed row, exactly zero at padded positions.
+        — the untrimmed row, exactly zero at padded positions. In adaptive
+        mode every dict additionally reports ``m_used`` (the rung the request
+        exited at), ``hops``, ``threshold`` (tol·|f_x − f_baseline|) and
+        ``converged``.
         """
         plan = plan_buckets(
             requests,
@@ -197,6 +402,13 @@ class ExplainEngine:
         )
         out: list[Optional[dict]] = [None] * len(requests)
         for bb in plan:
+            if self.adaptive:
+                for r in self._run_bucket_adaptive(bb):
+                    ri = r.pop("request")
+                    if not return_raw:
+                        r.pop("raw_token_scores")
+                    out[ri] = r
+                continue
             res = self._run_bucket(bb)
             per_token = np.asarray(res.attributions.sum(-1))  # (B, S)
             for row, ri in enumerate(bb.indices):

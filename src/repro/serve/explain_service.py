@@ -26,6 +26,12 @@ class ExplainService:
     n_int: int = 4
     chunk: int = 0
     pad_id: int = 0  # baseline token (see ExplainEngine._run_bucket)
+    # adaptive iso-convergence (DESIGN.md §7): m becomes the base rung of a
+    # pow-2 ladder topping out at m_max; requests exit as soon as
+    # δ ≤ tol·|f_x − f_baseline| and report their per-request m_used.
+    adaptive: bool = False
+    tol: float = 1e-2
+    m_max: int = 0
 
     def __post_init__(self):
         self._engine = ExplainEngine(
@@ -36,6 +42,9 @@ class ExplainService:
             n_int=self.n_int,
             chunk=self.chunk,
             pad_id=self.pad_id,
+            adaptive=self.adaptive,
+            tol=self.tol,
+            m_max=self.m_max,
         )
 
     @property

@@ -50,8 +50,8 @@ def m_and_boundaries(draw):
 @pytest.mark.parametrize("rule", ["midpoint", "left", "right", "trapezoid"])
 @pytest.mark.parametrize("m", [1, 2, 7, 64])
 def test_uniform_weights_sum_to_one(rule, m):
-    if rule == "trapezoid" and m == 1:
-        pytest.skip("trapezoid needs >= 2 nodes")
+    # m=1 trapezoid regression: both "endpoint halvings" used to land on the
+    # single node, producing Σw == 0.25.
     s = schedule.uniform(m, rule)
     np.testing.assert_allclose(s.weights.sum(), 1.0, rtol=1e-5)
     assert s.alphas.shape == (m,)

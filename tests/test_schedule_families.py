@@ -1,0 +1,86 @@
+"""Registry-family invariants that need no hypothesis install: Σw == 1 for
+every family × every small m (incl. the uniform(m=1, trapezoid) regression),
+and the nested-refinement contract adaptive serving rests on (DESIGN.md §7).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import schedule
+
+_PROBE = schedule.Probe(
+    bounds=jnp.asarray([0.0, 0.25, 0.5, 0.75, 1.0]),
+    vals=jnp.asarray([0.0, 0.1, 0.7, 0.95, 1.0]),
+)
+
+
+@pytest.mark.parametrize("name", sorted(schedule.SCHEDULES))
+@pytest.mark.parametrize("m", [1, 2, 3, 4, 5, 6, 7, 8, 12, 16])
+def test_every_family_weights_sum_to_one_small_m(name, m):
+    """Σw == 1 for every registry family × every small m (the completeness
+    axiom at the schedule level — a partial quadrature can never close the
+    completeness gap)."""
+    fam = schedule.family(name)
+    n = _PROBE.vals.shape[-1] - 1
+    if name in ("paper", "gauss") and m < n:
+        pytest.skip(f"{name} allocation needs >= 1 step per interval")
+    probe = None if fam.probe == "none" else _PROBE
+    s = fam.build(probe, m, power=0.5, min_steps=1, rule="midpoint")
+    a, w = np.asarray(s.alphas), np.asarray(s.weights)
+    assert a.shape[-1] == m and w.shape[-1] == m
+    np.testing.assert_allclose(w.sum(-1), 1.0, rtol=1e-4)
+    assert np.all(a >= 0.0) and np.all(a <= 1.0 + 1e-6)
+
+
+@pytest.mark.parametrize("rule", ["midpoint", "left", "right", "trapezoid"])
+@pytest.mark.parametrize("m", [1, 2, 7])
+def test_uniform_rules_sum_to_one(rule, m):
+    # m=1 trapezoid regression: both "endpoint halvings" used to land on the
+    # single node, producing Σw == 0.25.
+    s = schedule.uniform(m, rule)
+    np.testing.assert_allclose(np.asarray(s.weights).sum(), 1.0, rtol=1e-5)
+    a = np.asarray(s.alphas)
+    assert a.shape == (m,) and a.min() >= 0.0 and a.max() <= 1.0
+
+
+# ----------------------------------------------------- nested refinement
+
+
+@pytest.mark.parametrize("name", sorted(schedule.SCHEDULES))
+def test_refine_preserves_quadrature_invariants(name):
+    fam = schedule.family(name)
+    probe = None if fam.probe == "none" else _PROBE
+    s = fam.build(probe, 8, power=0.5, min_steps=1, rule="midpoint")
+    for _ in range(3):
+        s2 = fam.refine(s)
+        a, w = np.asarray(s2.alphas), np.asarray(s2.weights)
+        m = np.shape(s.alphas)[-1]
+        assert a.shape[-1] == 2 * m, "refine must double the node count"
+        # old nodes are preserved verbatim, old weights halve EXACTLY —
+        # the property that makes resumed accumulation bit-identical
+        np.testing.assert_array_equal(a[..., :m], np.asarray(s.alphas))
+        np.testing.assert_array_equal(w[..., :m], np.asarray(s.weights) * 0.5)
+        np.testing.assert_allclose(w.sum(-1), 1.0, rtol=1e-4)
+        assert np.all(a >= 0.0) and np.all(a <= 1.0 + 1e-6)
+        s = s2
+
+
+def test_refine_batched_schedules():
+    vals = jnp.asarray([[0.0, 0.5, 1.0], [0.0, 0.9, 1.0]])
+    s = schedule.paper(vals, 8)
+    r = schedule.refine_nested(s)
+    assert r.alphas.shape == (2, 16)
+    np.testing.assert_allclose(np.asarray(r.weights.sum(-1)), 1.0, rtol=1e-4)
+
+
+def test_refine_ladder_converges_on_smooth_integrand():
+    """Refining must actually refine: ∫exp error down the ladder ends far
+    below the base rung's error."""
+    s = schedule.uniform(8)
+    s = schedule.Schedule(s.alphas[None], s.weights[None])
+    true = float(np.e - 1.0)
+    est = lambda s: float(jnp.sum(s.weights * jnp.exp(s.alphas), -1)[0])
+    err0 = abs(est(s) - true)
+    for _ in range(4):
+        s = schedule.refine_nested(s)
+    assert abs(est(s) - true) < err0 / 20.0

@@ -8,11 +8,27 @@
 Prints the three roofline terms + top dot shapes so each hypothesis ->
 change -> measure cycle is one command. Results are NOT cached (always
 fresh); compare against results/dryrun_pod16x16.json baselines.
+
+Adaptive-explain mode (DESIGN.md §7) measures the OTHER hot path — the
+δ-feedback serving ladder — and appends one record per run to the BENCH
+trajectory so steps-to-tolerance is tracked alongside latency across
+perf-iteration cycles:
+
+    PYTHONPATH=src python tools/perf_iterate.py [llama3-8b] --explain-adaptive \
+        [--tol 1e-2 --base-m 8 --m-max 64 --note "my change"]
+
+Trajectory file: results/BENCH_trajectory.jsonl (one JSON object per line).
 """
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys
+
+# The roofline path wants a big fake device grid; the adaptive-explain path
+# runs a real (reduced) model and must keep the true host platform.
+if "--explain-adaptive" not in sys.argv:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 import argparse
+import json
 import time
 
 import jax
@@ -31,10 +47,87 @@ from repro.roofline import (
 from repro.roofline.hlo_flops import dot_flops_summary, entry_bytes, entry_bytes_by_op
 
 
+TRAJECTORY = os.path.join(os.path.dirname(__file__), "..", "results", "BENCH_trajectory.jsonl")
+
+
+def explain_adaptive_bench(args) -> dict:
+    """One δ-feedback serving measurement: mixed-length traffic through the
+    adaptive ExplainEngine; records steps-to-tolerance AND latency."""
+    import numpy as np
+
+    from repro.configs import ARCHS, reduced
+    from repro.models.registry import Model
+    from repro.serve import ExplainEngine, ExplainRequest
+
+    cfg = reduced(ARCHS[args.arch])
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(args.seed)
+    reqs = [
+        ExplainRequest(
+            tokens=rng.integers(1, cfg.vocab_size, int(s)).astype(np.int32),
+            target=int(rng.integers(0, cfg.vocab_size)),
+        )
+        for s in rng.integers(9, 33, size=args.requests)
+    ]
+    eng = ExplainEngine(
+        cfg, params, method=args.method, m=args.base_m, n_int=4,
+        adaptive=True, tol=args.tol, m_max=args.m_max,
+    )
+    eng.explain(reqs)  # warm every ladder executable this traffic touches
+    a = eng.stats.adaptive
+    warm = (a.total_steps, a.launched_steps, a.probe_forwards, a.converged,
+            a.early_exits, a.requests)
+    t0 = time.time()
+    out = eng.explain(reqs)
+    wall = time.time() - t0
+    # report the measured round only — mixing in warm-round counters would
+    # inflate steps relative to the measured latency
+    steps = a.total_steps - warm[0]
+    rec = {
+        "ts": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "kind": "explain_adaptive",
+        "arch": args.arch,
+        "method": args.method,
+        "tol": args.tol,
+        "ladder": list(eng.m_ladder),
+        "requests": a.requests - warm[5],
+        "wall_s": wall,
+        "latency_per_req_ms": 1e3 * wall / len(reqs),
+        "mean_m_used": steps / max(a.requests - warm[5], 1),
+        "total_steps": steps,
+        "launched_steps": a.launched_steps - warm[1],
+        "probe_forwards": a.probe_forwards - warm[2],
+        "converged": a.converged - warm[3],
+        "early_exits": a.early_exits - warm[4],
+        "m_used_hist": {str(k): v for k, v in sorted(a.m_used.items())},
+        "cache_misses": eng.stats.misses,
+        "mean_delta": float(np.mean([o["delta"] for o in out])),
+        "note": args.note,
+    }
+    os.makedirs(os.path.dirname(TRAJECTORY), exist_ok=True)
+    with open(TRAJECTORY, "a") as fh:
+        fh.write(json.dumps(rec) + "\n")
+    print(json.dumps(rec, indent=1))
+    print(f"-> appended to {os.path.normpath(TRAJECTORY)}")
+    return rec
+
+
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("arch")
-    ap.add_argument("shape")
+    # allow_abbrev=False: the XLA_FLAGS guard above matches the literal
+    # "--explain-adaptive", so abbreviated spellings must not parse either
+    ap = argparse.ArgumentParser(allow_abbrev=False)
+    ap.add_argument("arch", nargs="?", default="llama3-8b")
+    ap.add_argument("shape", nargs="?")
+    ap.add_argument("--explain-adaptive", action="store_true",
+                    help="measure δ-feedback explain serving instead of a cell")
+    ap.add_argument("--method", default="paper")
+    ap.add_argument("--tol", type=float, default=1e-2)
+    ap.add_argument("--base-m", type=int, default=8)
+    ap.add_argument("--m-max", type=int, default=64)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--note", default="", help="free-form tag for the trajectory record")
     ap.add_argument("--microbatches", type=int, default=8)
     ap.add_argument("--grad-compression", action="store_true")
     ap.add_argument("--no-remat", action="store_true")
@@ -42,6 +135,12 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--top-dots", type=int, default=8)
     args = ap.parse_args()
+
+    if args.explain_adaptive:
+        explain_adaptive_bench(args)
+        return
+    if not args.shape:
+        ap.error("shape is required unless --explain-adaptive is given")
 
     mesh = make_production_mesh(multi_pod=args.multi_pod)
     cfg = ARCHS[args.arch]
