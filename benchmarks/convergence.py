@@ -151,7 +151,7 @@ def adaptive_run(
 
     ok = uniform_steps is not None
     for method in methods:
-        ex = Explainer(f, method=method, m=m0, n_int=n_int)
+        ex = Explainer(f, schedule=method, m=m0, n_int=n_int)
         cache: dict = {}
         ex.attribute_adaptive(x, bl, t, tol=tol, m_max=m_max, cache=cache)  # warm
         t0 = time.perf_counter()

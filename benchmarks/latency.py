@@ -70,7 +70,7 @@ def run(batch_size: int = 8, delta_grid=(0.02, 0.015, 0.01, 0.005), steps_to=Non
                 m = steps_to[name][th]
                 n_int = int(name.split("_n")[-1]) if "_n" in name else 4
                 method = name.split("_n")[0] if "_n" in name else name
-                ex = Explainer(f, method=method, m=m, n_int=n_int)
+                ex = Explainer(f, schedule=method, m=m, n_int=n_int)
                 fn = jax.jit(lambda x, bl, t, e=ex: e.attribute(x, bl, t).attributions)
                 lat = _time(fn, x, bl, t)
                 iso[th][name] = {"m": m, "latency_s": lat, "speedup": u_lat / lat}
@@ -84,7 +84,7 @@ def run(batch_size: int = 8, delta_grid=(0.02, 0.015, 0.01, 0.005), steps_to=Non
         probe_fn = jax.jit(lambda x, bl, t, n=n_int: probes.boundary_values(f, x, bl, t, n))
         probe_lat = _time(probe_fn, x, bl, t)
         for m in (64, 256):
-            ex = Explainer(f, method="paper", m=m, n_int=n_int)
+            ex = Explainer(f, schedule="paper", m=m, n_int=n_int)
             fn = jax.jit(lambda x, bl, t, e=ex: e.attribute(x, bl, t).attributions)
             total = _time(fn, x, bl, t)
             pct = 100.0 * probe_lat / total

@@ -1,0 +1,102 @@
+"""Method-zoo quality bench: insertion/deletion AUC + latency per
+method × schedule on the trained paper CNN -> results/BENCH_quality.json.
+
+The MethodSpec registry (DESIGN.md §8) promises that every attribution
+method rides every schedule family through one compiled pipeline; this bench
+is the quantitative half of that promise: for each (method, schedule) cell it
+records heatmap quality (insertion AUC up / deletion AUC down = better
+feature ordering — ``repro.core.metrics``), the completeness gap δ, and the
+warmed end-to-end wall latency of the jitted explainer (compile time paid
+outside the timed call, as in serving).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import cnn_prob_fn, eval_batch, load_or_train_cnn
+from repro.core import metrics
+from repro.core.api import Explainer
+from repro.core.methods import METHODS
+
+DEFAULT_SCHEDULES = ("uniform", "paper", "warp")
+
+
+def run(
+    batch_size: int = 4,
+    *,
+    m: int = 32,
+    n_int: int = 4,
+    n_samples: int = 2,
+    sigma: float = 0.05,
+    schedules=DEFAULT_SCHEDULES,
+    auc_steps: int = 8,
+) -> dict:
+    params = load_or_train_cnn()
+    f = cnn_prob_fn(params)
+    x, t = eval_batch(batch_size)
+    bl = jnp.zeros_like(x)
+
+    out = {
+        "m": m,
+        "n_int": n_int,
+        "n_samples": n_samples,
+        "sigma": sigma,
+        "batch": int(x.shape[0]),
+        "auc_steps": auc_steps,
+        "cells": {},
+    }
+    print(f"\n== method-zoo quality (m={m}, n_int={n_int}, B={x.shape[0]}) ==")
+    print("method,schedule,insertion_auc,deletion_auc,delta,latency_ms")
+    for method in sorted(METHODS):
+        for sched_name in schedules:
+            ex = Explainer(
+                f,
+                method=method,
+                schedule=sched_name,
+                m=m,
+                n_int=n_int,
+                n_samples=n_samples,
+                sigma=sigma,
+            )
+            attribute = ex.jitted()
+            res = jax.block_until_ready(attribute(x, bl, t))  # compile + warm
+            t0 = time.perf_counter()
+            res = jax.block_until_ready(attribute(x, bl, t))
+            wall = time.perf_counter() - t0
+            ins, dele = metrics.insertion_deletion_auc(
+                f, x, bl, res.attributions, t, steps=auc_steps
+            )
+            cell = {
+                "insertion_auc": float(jnp.mean(ins)),
+                "deletion_auc": float(jnp.mean(dele)),
+                "delta": float(jnp.mean(res.delta)),
+                "latency_ms": 1e3 * wall,
+            }
+            out["cells"][f"{method}/{sched_name}"] = cell
+            print(
+                f"{method},{sched_name},{cell['insertion_auc']:.4f},"
+                f"{cell['deletion_auc']:.4f},{cell['delta']:.5f},"
+                f"{cell['latency_ms']:.1f}"
+            )
+    # sanity aggregated into the JSON: every method must order features
+    # better than chance (insertion above deletion) on the confident CNN
+    out["pass"] = bool(
+        all(
+            c["insertion_auc"] > c["deletion_auc"] for c in out["cells"].values()
+        )
+    )
+    print(f"quality gate (insertion > deletion for every cell): "
+          f"{'PASS' if out['pass'] else 'FAIL'}")
+    return out
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -6,6 +6,8 @@ Order:
   pathinfo     — Fig 3(b,c)  information content along the path
   convergence  — Fig 5(a,b) + Fig 2(b)  delta vs m; steps to delta_th
   latency      — Fig 2(a) + Fig 6(a,b)  wall-clock; iso-delta speedup; overhead
+  quality      — beyond-paper: method-zoo insertion/deletion AUC + latency
+                 per method × schedule -> results/BENCH_quality.json
   lm_convergence — beyond-paper: NUIG on the assigned LM families
   roofline     — §Roofline table from the dry-run artifacts
 
@@ -18,8 +20,23 @@ import json
 import os
 import time
 
-from benchmarks import convergence, latency, lm_convergence, pathinfo, roofline_bench
+from benchmarks import (
+    convergence,
+    latency,
+    lm_convergence,
+    pathinfo,
+    quality,
+    roofline_bench,
+)
 from benchmarks.common import RESULTS_DIR, accuracy, load_or_train_cnn
+
+
+def _write(name: str, payload: dict) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, name)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+    return path
 
 
 def main() -> int:
@@ -35,17 +52,25 @@ def main() -> int:
         action="store_true",
         help="tiny adaptive gate for CI: exit 1 if adaptive loses to fixed-m uniform",
     )
+    ap.add_argument(
+        "--quality",
+        action="store_true",
+        help="method-zoo AUC/latency bench only -> results/BENCH_quality.json",
+    )
     args = ap.parse_args()
 
     if args.adaptive or args.smoke:
         out = convergence.adaptive_run(
             batch_size=4 if args.smoke else 8, smoke=args.smoke
         )
-        os.makedirs(RESULTS_DIR, exist_ok=True)
-        path = os.path.join(RESULTS_DIR, "BENCH_adaptive.json")
-        with open(path, "w") as f:
-            json.dump(out, f, indent=1, default=str)
+        path = _write("BENCH_adaptive.json", out)
         print(f"# adaptive bench -> {path}")
+        return 0 if out["pass"] else 1
+
+    if args.quality:
+        out = quality.run()
+        path = _write("BENCH_quality.json", out)
+        print(f"# quality bench -> {path}")
         return 0 if out["pass"] else 1
 
     t0 = time.time()
@@ -62,6 +87,8 @@ def main() -> int:
     out["latency"] = latency.run(
         batch_size=4 if args.fast else 8, steps_to=conv["steps_to_threshold"]
     )
+    out["quality"] = quality.run(batch_size=4 if args.fast else 8)
+    _write("BENCH_quality.json", out["quality"])
     out["lm_convergence"] = lm_convergence.run(
         arch_ids=("llama3-8b",) if args.fast else lm_convergence.DEFAULT_ARCHS,
         m=16 if args.fast else 32,

@@ -46,7 +46,7 @@ def main():
 
     results = {}
     for method in ("paper", "uniform"):
-        svc = ExplainService(cfg, params, method=method, m=args.m, n_int=4)
+        svc = ExplainService(cfg, params, schedule=method, m=args.m, n_int=4)
         svc.explain(reqs[:1])  # warmup / compile
         t0 = time.perf_counter()
         out = svc.explain(reqs)
@@ -61,7 +61,7 @@ def main():
     # iso-convergence: how many uniform steps match paper's delta?
     target_delta = results["paper"][1]
     for mu in (args.m, 2 * args.m, 4 * args.m, 8 * args.m):
-        svc = ExplainService(cfg, params, method="uniform", m=mu)
+        svc = ExplainService(cfg, params, schedule="uniform", m=mu)
         d = float(np.mean([o["delta"] for o in svc.explain(reqs)]))
         print(f"uniform m={mu}: delta={d:.5f}")
         if d <= target_delta:
@@ -76,7 +76,7 @@ def main():
     base_m = max(4, args.m // 4)  # paper allocation needs >= n_int steps
     print(f"\n-- adaptive: tol={args.tol} relative δ, ladder from m={base_m}")
     svc = ExplainService(
-        cfg, params, method="paper", m=base_m, n_int=4,
+        cfg, params, schedule="paper", m=base_m, n_int=4,
         adaptive=True, tol=args.tol, m_max=max(2 * args.m, 2 * base_m),
     )
     svc.explain(reqs)  # warm every ladder executable this traffic touches

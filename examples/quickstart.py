@@ -36,7 +36,7 @@ def main():
 
     m = 32  # total interpolation steps — paper uses 10-30x more for uniform
     for method in ("uniform", "paper"):
-        explainer = Explainer(f, method=method, m=m, n_int=4)
+        explainer = Explainer(f, schedule=method, m=m, n_int=4)
         res = explainer.attribute(x, baseline, targets)
         print(f"\nmethod={method:8s} m={m} convergence delta={float(res.delta[0]):.5f}")
 

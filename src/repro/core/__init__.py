@@ -1,6 +1,18 @@
 """The paper's primary contribution: non-uniform interpolation IG."""
 from repro.core.api import Explainer
 from repro.core.ig import IGResult, attribute
+from repro.core.methods import METHODS, MethodSpec
 from repro.core.schedule import Schedule, uniform, paper, warp, gauss
 
-__all__ = ["Explainer", "IGResult", "attribute", "Schedule", "uniform", "paper", "warp", "gauss"]
+__all__ = [
+    "Explainer",
+    "IGResult",
+    "attribute",
+    "METHODS",
+    "MethodSpec",
+    "Schedule",
+    "uniform",
+    "paper",
+    "warp",
+    "gauss",
+]

@@ -1,30 +1,43 @@
 """High-level Explainer API — the paper's algorithm as a one-call feature.
 
-    explainer = Explainer(f, method="paper", n_int=4, m=64)
+    explainer = Explainer(f, method="ig", schedule="paper", n_int=4, m=64)
     result = explainer.attribute(x, baseline, target)
 
 ``f(xs, targets) -> (N,)`` is any differentiable scalar model output
 (classifier probability, LM next-token log-prob, ...).
+
+Two orthogonal registries compose here (DESIGN.md §2/§8):
+  * ``schedule`` — a ``repro.core.schedule.SCHEDULES`` family name: where the
+    quadrature nodes go (uniform / paper / warp / gauss / refine);
+  * ``method`` — a ``repro.core.methods.METHODS`` name: what accumulates at
+    those nodes (ig / idgi / noise_tunnel / expected_grad).
+Every method rides every schedule; path-ensemble methods (noise_tunnel,
+expected_grad) expand each example to ``n_samples`` contiguous rows before
+stage 1 and reduce (mean over samples) after stage 2, so the compiled
+pipeline only ever sees plain per-row attribution problems.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any, Callable, Optional
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ig, probes, schedule
+from repro.core import ig, methods as methods_mod, probes
+from repro.core import schedule as schedules
 from repro.core.ig import IGResult, IGState
-from repro.core.probes import ScalarFn
+from repro.core.methods import MethodSpec
+from repro.core.probes import ScalarFn, repeat_tree
 from repro.core.schedule import Schedule
 
 
 @dataclass
 class Explainer:
     f: ScalarFn
-    method: str = "paper"  # any name in schedule.SCHEDULES
+    method: Union[str, MethodSpec] = "ig"  # any name in methods.METHODS
+    schedule: str = "paper"  # any name in schedule.SCHEDULES
     m: int = 64  # total interpolation steps
     n_int: int = 4  # stage-1 intervals (paper sweeps 2..8)
     refine_rounds: int = 4  # for the "refine" probe
@@ -34,6 +47,63 @@ class Explainer:
     chunk: int = 0  # stage-2 step chunk (0 = all at once)
     interp_fn: Callable = None  # optional Pallas kernel injection
     accum_fn: Callable = None
+    # path-ensemble controls (noise_tunnel / expected_grad): 0 samples means
+    # "the method's registered default"; ``sample_seed`` makes the ensemble
+    # deterministic — the same Explainer config always draws the same paths,
+    # which is what lets adaptive runs be bit-compared against fixed runs.
+    n_samples: int = 0
+    sigma: float = 0.0
+    sample_seed: int = 0
+
+    @property
+    def spec(self) -> MethodSpec:
+        return methods_mod.get(self.method)
+
+    @property
+    def ensemble_size(self) -> int:
+        spec = self.spec
+        if spec.expand is None:
+            return 1
+        return self.n_samples if self.n_samples else spec.n_samples
+
+    @property
+    def ensemble_sigma(self) -> float:
+        return self.sigma if self.sigma else self.spec.sigma_default
+
+    # -- path-ensemble expansion ------------------------------------------
+
+    def expand_inputs(
+        self,
+        x: jax.Array,
+        baseline: jax.Array,
+        target: Any,
+        mask: Optional[jax.Array] = None,
+    ) -> tuple[jax.Array, jax.Array, Any, Optional[jax.Array], int]:
+        """(B, ...) -> (B·n, ...) sample rows (identity for n == 1), samples
+        of example b contiguous at rows [b·n, (b+1)·n)."""
+        spec, n = self.spec, self.ensemble_size
+        if spec.expand is None or n == 1:
+            return x, baseline, target, mask, 1
+        key = jax.random.PRNGKey(self.sample_seed)
+        x2, b2 = spec.expand(x, baseline, key, n, self.ensemble_sigma)
+        t2 = repeat_tree(target, n)
+        m2 = None if mask is None else jnp.repeat(mask, n, axis=0)
+        return x2, b2, t2, m2, n
+
+    @staticmethod
+    def reduce_result(res: IGResult, n: int) -> IGResult:
+        """Mean over each example's n contiguous sample rows; δ is recomputed
+        on the reduced quantities (the expectation's completeness gap, not
+        the mean of per-sample gaps)."""
+        if n == 1:
+            return res
+        red = lambda a: a.reshape((-1, n) + a.shape[1:]).mean(axis=1)
+        attr, f_x, f_b = red(res.attributions), red(res.f_x), red(res.f_baseline)
+        B = attr.shape[0]
+        delta = jnp.abs(attr.reshape(B, -1).sum(-1) - (f_x - f_b))
+        return IGResult(attr, f_x, f_b, delta)
+
+    # -- fixed-m attribution ----------------------------------------------
 
     def build_schedule(
         self,
@@ -48,7 +118,7 @@ class Explainer:
         its ``ScheduleFamily.probe`` spec names, hand the result to its
         uniform-signature builder. Probe cost: n_int+1 (+rounds) forwards.
         """
-        fam = schedule.family(self.method)
+        fam = schedules.family(self.schedule)
         probe = probes.run_probe(
             fam.probe,
             self.f,
@@ -70,17 +140,20 @@ class Explainer:
         target: Any,
         mask: Optional[jax.Array] = None,
     ) -> IGResult:
-        sched = self.build_schedule(x, baseline, target, mask)
-        return ig.attribute(
+        x2, b2, t2, m2, n = self.expand_inputs(x, baseline, target, mask)
+        sched = self.build_schedule(x2, b2, t2, m2)
+        res = ig.attribute(
             self.f,
-            x,
-            baseline,
+            x2,
+            b2,
             sched,
-            target,
-            mask=mask,
+            t2,
+            method=self.spec,
+            mask=m2,
             chunk=self.chunk,
             **self._ig_kwargs(),
         )
+        return self.reduce_result(res, n)
 
     def jitted(self) -> Callable:
         """One compiled end-to-end (stage1 + stage2) explanation step."""
@@ -115,7 +188,12 @@ class Explainer:
     ) -> tuple[IGResult, IGState, Schedule]:
         """Rung 0 of the adaptive ladder: probe, build the base schedule,
         accumulate its m nodes, and return the resumable state plus the
-        materialized schedule (needed to refine later)."""
+        materialized schedule (needed to refine later).
+
+        Per-ROW, never expanded: the serving engine (and the adaptive loop
+        below) performs path-ensemble expansion itself at batch-construction
+        time, so this compiled unit stays method-independent up to the
+        accumulator class (DESIGN.md §8)."""
         sched = self.build_schedule(x, baseline, target, mask)
         res, state = ig.attribute(
             self.f,
@@ -123,6 +201,7 @@ class Explainer:
             baseline,
             sched,
             target,
+            method=self.spec,
             mask=mask,
             chunk=self.adaptive_chunk,
             return_state=True,
@@ -141,13 +220,14 @@ class Explainer:
     ) -> tuple[IGResult, IGState]:
         """One ladder hop: accumulate the refined schedule's NEW nodes on top
         of ``state``. ``state_scale=0.5`` re-expresses the old accumulator in
-        the refined rung's exactly-halved weights."""
+        the refined rung's exactly-halved weights. Per-row (see ``start``)."""
         res, state = ig.attribute(
             self.f,
             x,
             baseline,
             new_nodes,
             target,
+            method=self.spec,
             mask=mask,
             chunk=self.adaptive_chunk,
             state=state,
@@ -172,25 +252,34 @@ class Explainer:
 
         Runs the base rung (``self.m`` nodes), then repeatedly refines the
         schedule (nested doubling — no prior gradient is discarded) and
-        resumes accumulation for the examples whose completeness gap still
+        resumes accumulation for the rows whose completeness gap still
         exceeds ``tol · |f(x) − f(x′)|``, until all converge or the ladder
-        tops out at ``m_max`` (default ``8·m``). Converged examples exit
+        tops out at ``m_max`` (default ``8·m``). Converged rows exit
         with the rung they converged at; their rows are excluded from later
         hops (the serving engine additionally re-buckets survivors — here
         rows are simply gathered, so each distinct (active-count, rung)
         shape compiles once into ``cache``).
 
+        Path-ensemble methods expand each example to ``ensemble_size``
+        sample rows first; the ladder then runs per ROW (each sample
+        converges on its own δ) and the final IGResult is reduced back to
+        per-example means. The ``info`` arrays stay per-row — ``n_samples``
+        reports the expansion factor for callers that aggregate.
+
         Returns ``(IGResult, info)``: per-example final attributions/δ, and
-        ``info`` with per-example ``m_used``/``hops``/``delta``/``threshold``
+        ``info`` with per-row ``m_used``/``hops``/``delta``/``threshold``
         /``converged`` plus aggregate ``total_steps`` (Σ m_used — the
         iso-convergence metric), ``probe_forwards``, ``compiles``, and the
         ``ladder``. Pass the same ``cache`` dict across calls to reuse the
         AOT-compiled rung executables (zero recompiles at steady state).
         """
-        fam = schedule.family(self.method)
-        ladder = schedule.m_ladder(self.m, m_max if m_max else 8 * self.m)
+        fam = schedules.family(self.schedule)
+        ladder = schedules.m_ladder(self.m, m_max if m_max else 8 * self.m)
         cache = cache if cache is not None else {}
         compiles = 0
+        x, baseline, target, mask, n_samples = self.expand_inputs(
+            x, baseline, target, mask
+        )
         B = x.shape[0]
 
         def aot(key, fn, args):
@@ -209,7 +298,8 @@ class Explainer:
         # target pytree structure): a cache dict shared across calls must
         # never hand back an incompatible compiled program
         cfg_key = (
-            self.method,
+            self.spec.name,
+            self.schedule,
             self.m,
             self.n_int,
             self.adaptive_chunk,
@@ -271,8 +361,11 @@ class Explainer:
             a_act, w_act = ra[keep], rw[keep]
             acc_act = np.asarray(st2.acc)[keep]
 
-        final = IGResult(
-            jnp.asarray(out_attr), res.f_x, res.f_baseline, jnp.asarray(delta)
+        final = self.reduce_result(
+            IGResult(
+                jnp.asarray(out_attr), res.f_x, res.f_baseline, jnp.asarray(delta)
+            ),
+            n_samples,
         )
         info = {
             "m_used": m_used,
@@ -286,5 +379,6 @@ class Explainer:
             "compiles": compiles,
             "ladder": ladder,
             "chunk": self.adaptive_chunk,
+            "n_samples": n_samples,
         }
         return final, info

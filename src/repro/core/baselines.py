@@ -2,6 +2,12 @@
 
 Vision: black / white / noise images. Token models: zero or pad-token
 embeddings (interpolation happens in embedding space — tokens are discrete).
+
+``BASELINES``/``get`` cover EVERY baseline here, including the ones that
+need extra arguments (``gaussian`` a PRNG key, ``pad_embedding`` the
+embedding table) — callers bind those with ``functools.partial`` or keyword
+arguments; what the registry guarantees is that every name resolves and an
+unknown name fails loudly with the valid names listed.
 """
 from __future__ import annotations
 
@@ -27,10 +33,17 @@ def pad_embedding(embed_table: jax.Array, x_embeds: jax.Array, pad_id: int = 0) 
     return jnp.broadcast_to(pad, x_embeds.shape)
 
 
-BASELINES = {"black": black, "white": white}
+BASELINES = {
+    "black": black,
+    "white": white,
+    "gaussian": gaussian,
+    "pad_embedding": pad_embedding,
+}
 
 
 def get(name: str):
     if name not in BASELINES:
-        raise KeyError(f"unknown baseline {name!r}; known: {sorted(BASELINES)}")
+        raise ValueError(
+            f"unknown baseline {name!r}; valid baselines: {sorted(BASELINES)}"
+        )
     return BASELINES[name]

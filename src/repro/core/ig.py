@@ -6,23 +6,33 @@ the batch axis (the paper's GPU batching, as a shardable pjit data axis), and
 steps are processed in static-size chunks under ``lax.scan`` so the same
 executable serves any m and memory stays bounded.
 
-Kernel injection: ``interp_fn`` / ``accum_fn`` default to the pure-jnp oracles
-and can be swapped for the Pallas kernels in ``repro.kernels``.
+Attribution methods (DESIGN.md §8): the per-chunk accumulator and the
+finalizer are method data, dispatched through the ``repro.core.methods``
+MethodSpec registry — vanilla Riemann IG and IDGI's gradient-direction
+f-difference split ride the identical scan; path-ensemble methods
+(noise_tunnel / expected_grad) expand their batch BEFORE this function and
+reduce after it, so per-row they ARE the riemann method.
+
+Kernel injection: ``interp_fn`` / ``accum_fn`` default to the pure-jnp
+oracles (the method's registered accumulator) and can be swapped for the
+Pallas kernels in ``repro.kernels``.
 
 Masking (shape-bucketed serving, DESIGN.md §6): ``mask`` marks real
 positions of right-padded inputs. It is threaded through ``interp_fn`` (padded
-positions never leave the baseline), ``accum_fn`` (padded gradients never
+positions never leave the baseline), the accumulator (padded gradients never
 accumulate), the final attribution (exact zeros at padded positions), and the
 completeness gap δ (summed over real positions only — which the exact zeros
 make the same as summing everything).
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple, Optional, Union
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import methods as methods_mod
+from repro.core.methods import MethodSpec
 from repro.core.paths import interpolate, mask_to_baseline
 from repro.core.probes import ScalarFn, repeat_tree
 from repro.core.schedule import Schedule
@@ -38,36 +48,19 @@ class IGResult(NamedTuple):
 class IGState(NamedTuple):
     """Resumable stage-2 accumulator (adaptive iso-convergence, DESIGN.md §7).
 
-    ``acc`` is Σ_k w_k g_k at the rung last run — the path integral estimate
-    *before* the (x − x′) factor — and ``f_x``/``f_baseline`` are the endpoint
-    forwards, computed once at rung 0 and carried so ladder hops never repeat
-    them. Rows may be gathered/re-batched freely: every field is per-example.
+    ``acc`` is the method's running node sum at the rung last run — for
+    riemann methods Σ_k w_k g_k (the path integral estimate *before* the
+    (x − x′) factor), for IDGI the attribution itself — and ``f_x``/
+    ``f_baseline`` are the endpoint forwards, computed once at rung 0 and
+    carried so ladder hops never repeat them. Rows may be gathered/re-batched
+    freely: every field is per-example. Any registered method's accumulator
+    is additive over nodes and degree-1 in the weights (the MethodSpec state
+    contract, DESIGN.md §8), so this one pytree serves the whole zoo.
     """
 
-    acc: jax.Array  # (B, *F) float32 running Σ w·g
+    acc: jax.Array  # (B, *F) float32 running node sum
     f_x: jax.Array  # (B,)
     f_baseline: jax.Array  # (B,)
-
-
-def _expand_mask(mask: jax.Array, ndim: int, *, lead: int = 1) -> jax.Array:
-    """(B, *L) -> (B, 1×(lead-1), *L, 1, ...) broadcastable to rank ``ndim``."""
-    shape = mask.shape[:1] + (1,) * (lead - 1) + mask.shape[1:]
-    return mask.reshape(shape + (1,) * (ndim - len(shape))).astype(jnp.float32)
-
-
-def _default_accum(
-    acc: jax.Array,
-    grads: jax.Array,
-    weights: jax.Array,
-    *,
-    mask: Optional[jax.Array] = None,
-) -> jax.Array:
-    """acc (B,*F) += Σ_k w_k g_k.  grads: (B, c, *F); weights: (B, c);
-    mask: optional (B, *L) real-position mask (padded grads are dropped)."""
-    if mask is not None:
-        grads = grads * _expand_mask(mask, grads.ndim, lead=2)
-    wexp = weights.reshape(weights.shape + (1,) * (grads.ndim - 2))
-    return acc + jnp.sum(grads.astype(jnp.float32) * wexp, axis=1)
 
 
 def attribute(
@@ -77,21 +70,29 @@ def attribute(
     sched: Schedule,
     target: Any,
     *,
+    method: Union[str, MethodSpec] = "ig",
     mask: Optional[jax.Array] = None,
     chunk: int = 0,
     interp_fn: Callable = interpolate,
-    accum_fn: Callable = _default_accum,
+    accum_fn: Optional[Callable] = None,
     state: Optional[IGState] = None,
     state_scale: float = 1.0,
     return_state: bool = False,
 ):
-    """Integrated Gradients along the straight-line path with any schedule.
+    """Path attribution along the straight line with any schedule + method.
 
     f: (xs (N, *F), targets) -> (N,);  x/baseline: (B, *F).
     target: pytree of per-example arrays (plain (B,) ids, or e.g.
     {"target": ids, "pos": positions} for bucketed serving).
     sched.alphas/weights: (m,) shared or (B, m) per-example.
+    method: a ``repro.core.methods`` registry name or MethodSpec — selects
+    the per-chunk accumulator and the finalizer. Path-ensemble expansion
+    (noise_tunnel / expected_grad) is the CALLER's job (``core.api``): this
+    function computes one path per row.
     mask: optional (B, *L) real-position mask, L a prefix of the feature dims.
+    accum_fn: optional accumulator override (Pallas kernel injection); must
+    honor the MethodSpec accumulator signature
+    ``(acc, grads, weights, *, diff, mask)``.
 
     Resumability (DESIGN.md §7): pass ``state`` from a prior call to continue
     accumulating — ``sched`` then holds only the NEW nodes, the endpoint
@@ -102,10 +103,14 @@ def attribute(
     run over the full refined schedule at the same ``chunk``). With
     ``return_state`` the call returns ``(IGResult, IGState)``.
     """
+    spec = methods_mod.get(method)
+    if accum_fn is None:
+        accum_fn = spec.accum_fn
     B = x.shape[0]
     # pinned view for the endpoint terms; the scan's interpolants are pinned
     # inside interp_fn (mask kwarg) — exactly one select on each path
     xp = mask_to_baseline(x, baseline, mask)
+    diff = xp - baseline  # path direction, consumed by direction-aware accums
     alphas, weights = sched.alphas, sched.weights
     if alphas.ndim == 1:
         alphas = jnp.broadcast_to(alphas, (B,) + alphas.shape)
@@ -126,7 +131,7 @@ def attribute(
         flat = xi.reshape((B * c,) + x.shape[1:])
         t = repeat_tree(target, c)
         g = grad_f(flat, t).reshape((B, c) + x.shape[1:])
-        return accum_fn(acc, g, w, **mkw), None
+        return accum_fn(acc, g, w, diff=diff, **mkw), None
 
     if state is None:
         acc0 = jnp.zeros_like(x, dtype=jnp.float32)
@@ -135,9 +140,7 @@ def attribute(
         if state_scale != 1.0:
             acc0 = acc0 * jnp.float32(state_scale)
     acc, _ = jax.lax.scan(step, acc0, (a_ch, w_ch))
-    attr = (xp - baseline).astype(jnp.float32) * acc
-    if mask is not None:
-        attr = attr * _expand_mask(mask, attr.ndim)
+    attr = spec.finalize(acc, xp, baseline, mask)
 
     if state is None:
         both = jnp.concatenate([xp, baseline], axis=0)

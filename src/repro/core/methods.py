@@ -1,0 +1,225 @@
+"""Attribution-method zoo — the ``MethodSpec`` registry (DESIGN.md §8).
+
+The paper accelerates one algorithm (path-integrated gradients), but the
+serving stack — non-uniform schedules, shape-bucketed batching, the AOT
+executable cache, the δ-adaptive m-ladder — is algorithm-agnostic. This
+registry factors the one method-specific piece, the per-chunk *accumulator*,
+out of ``repro.core.ig.attribute`` so every IG variant that rides the same
+interpolate→grad→accumulate loop inherits the whole stack for free.
+
+A ``MethodSpec`` mirrors ``schedule.ScheduleFamily``: a name, a per-chunk
+accumulator with ONE uniform signature, a finalizer, and (optionally) a
+path-ensemble expansion. The registered methods:
+
+  ig            — vanilla Riemann IG: acc += Σ_k w_k g_k; φ = (x − x′) ⊙ acc.
+  idgi          — IDGI (Yang et al., CVPR 2023): each step contributes its
+                  f-difference split along the gradient direction,
+                  φ_k = (g_k ⊙ g_k) / ⟨g_k, g_k⟩ · d_k, which discards the
+                  gradient component orthogonal to the function change
+                  (explanation noise). The quadrature-compatible form used
+                  here takes the tangent f-difference d_k = ⟨g_k, x − x′⟩ w_k
+                  (the secant f(x_{k+1}) − f(x_k) of the original is its
+                  first-order approximation); every step stays additive and
+                  weight-proportional, so IDGI rides chunked scans, nested
+                  refinement, and bit-identical adaptive resume unchanged.
+  noise_tunnel  — SmoothGrad-style expectation over noisy copies of x
+                  (Goh et al., 2021 SmoothTaylor regime): expand each example
+                  to n_samples noisy rows, run vanilla accumulation, average.
+  expected_grad — expected gradients over a baseline distribution
+                  (``core/baselines``): expand each example with baselines
+                  jittered by ``baselines.gaussian``, average.
+
+Hop-executable compatibility (DESIGN.md §7/§8): the serving engine keys its
+stage-2 executables by ``MethodSpec.accum`` — the accumulator CLASS — not by
+method name. ``ig``/``noise_tunnel``/``expected_grad`` all accumulate with
+``riemann`` (expansion happens outside the compiled program, at batch
+construction), so they share one warmed set of hop executables; ``idgi``
+compiles its own. Either way the shape set stays closed: zero steady-state
+recompiles.
+
+State pytree contract: an accumulator must be (a) additive over schedule
+nodes and (b) homogeneous degree-1 in the weights, so that
+``ig.IGState.acc`` scaled by the exact power-of-two ``state_scale`` resumes
+bit-identically after ``schedule.refine_nested`` (both registered
+accumulators satisfy this; see DESIGN.md §8 for the obligations a new
+method must meet).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.baselines import gaussian
+
+
+def expand_mask(mask: jax.Array, ndim: int, *, lead: int = 1) -> jax.Array:
+    """(B, *L) -> (B, 1×(lead-1), *L, 1, ...) broadcastable to rank ``ndim``."""
+    shape = mask.shape[:1] + (1,) * (lead - 1) + mask.shape[1:]
+    return mask.reshape(shape + (1,) * (ndim - len(shape))).astype(jnp.float32)
+
+
+# --------------------------------------------------------------- accumulators
+#
+# Uniform signature (the MethodSpec contract, DESIGN.md §8):
+#   accum(acc (B, *F) f32, grads (B, c, *F), weights (B, c),
+#         *, diff (B, *F), mask optional (B, *L)) -> (B, *F) f32
+# ``diff`` is the masked path direction x − x′ (ignored by methods that do
+# not need it). Pallas drop-ins live in ``repro.kernels.ig_accum.ops``.
+
+
+def riemann_accum(
+    acc: jax.Array,
+    grads: jax.Array,
+    weights: jax.Array,
+    *,
+    diff: Optional[jax.Array] = None,
+    mask: Optional[jax.Array] = None,
+) -> jax.Array:
+    """acc += Σ_k w_k g_k — the vanilla IG path-integral estimate."""
+    if mask is not None:
+        grads = grads * expand_mask(mask, grads.ndim, lead=2)
+    wexp = weights.reshape(weights.shape + (1,) * (grads.ndim - 2))
+    return acc + jnp.sum(grads.astype(jnp.float32) * wexp, axis=1)
+
+
+def idgi_accum(
+    acc: jax.Array,
+    grads: jax.Array,
+    weights: jax.Array,
+    *,
+    diff: jax.Array,
+    mask: Optional[jax.Array] = None,
+) -> jax.Array:
+    """acc += Σ_k c_k (g_k ⊙ g_k), c_k = w_k ⟨g_k, x − x′⟩ / ⟨g_k, g_k⟩.
+
+    Each step distributes its (tangent) f-difference d_k = ⟨g_k, x − x′⟩ w_k
+    over features ∝ g_k², i.e. along the gradient direction only — the IDGI
+    noise-removal step. ⟨g, g⟩ == 0 (flat region) contributes exactly zero.
+    Homogeneous degree-1 in ``weights`` ⇒ the resumable-state contract holds.
+    """
+    if mask is not None:
+        grads = grads * expand_mask(mask, grads.ndim, lead=2)
+    B, c = grads.shape[:2]
+    g = grads.astype(jnp.float32).reshape(B, c, -1)
+    d = diff.astype(jnp.float32).reshape(B, 1, -1)
+    s = jnp.sum(g * g, axis=-1)  # (B, c)  ⟨g, g⟩
+    p = jnp.sum(g * d, axis=-1)  # (B, c)  ⟨g, x − x′⟩
+    coeff = weights.astype(jnp.float32) * p * jnp.where(s > 0.0, 1.0 / jnp.where(s > 0.0, s, 1.0), 0.0)
+    return acc + jnp.sum((g * g) * coeff[..., None], axis=1).reshape(acc.shape)
+
+
+# ----------------------------------------------------------------- finalizers
+
+
+def riemann_finalize(
+    acc: jax.Array, x: jax.Array, baseline: jax.Array,
+    mask: Optional[jax.Array] = None,
+) -> jax.Array:
+    """φ = (x − x′) ⊙ acc, exactly zero at masked positions."""
+    attr = (x - baseline).astype(jnp.float32) * acc
+    if mask is not None:
+        attr = attr * expand_mask(mask, attr.ndim)
+    return attr
+
+
+def idgi_finalize(
+    acc: jax.Array, x: jax.Array, baseline: jax.Array,
+    mask: Optional[jax.Array] = None,
+) -> jax.Array:
+    """IDGI's direction factor is inside the accumulator: φ = acc."""
+    if mask is not None:
+        acc = acc * expand_mask(mask, acc.ndim)
+    return acc
+
+
+# ------------------------------------------------------ path-ensemble expand
+#
+# Expansion signature: (x, baseline, key, n, sigma) -> (x', baseline') with
+# leading axis B·n, samples of example b contiguous at rows [b·n, (b+1)·n).
+# Expansion runs OUTSIDE the compiled stage-2 program (batch construction),
+# which is what keeps the expanded methods on the riemann hop executables.
+
+
+def noise_expand(
+    x: jax.Array, baseline: jax.Array, key: jax.Array, n: int, sigma: float
+) -> tuple[jax.Array, jax.Array]:
+    """Noise-tunnel sampling: noisy copies of x, shared baseline."""
+    from repro.core.smooth import noise_samples
+
+    return noise_samples(x, key, n, sigma), jnp.repeat(baseline, n, axis=0)
+
+
+def baseline_expand(
+    x: jax.Array, baseline: jax.Array, key: jax.Array, n: int, sigma: float
+) -> tuple[jax.Array, jax.Array]:
+    """Expected-gradients sampling: shared x, baselines drawn from the
+    ``core.baselines`` gaussian distribution centred on the nominal x′."""
+    br = jnp.repeat(baseline, n, axis=0)
+    return jnp.repeat(x, n, axis=0), br + gaussian(br, key, sigma)
+
+
+# ------------------------------------------------------------------ registry
+
+
+@dataclass(frozen=True)
+class MethodSpec:
+    """One attribution method = accumulator + finalizer (+ expansion).
+
+    ``accum`` names the accumulator CLASS ("riemann" | "idgi") — the engine
+    keys hop executables by it, so methods sharing an accumulator share one
+    warmed executable set. ``expand`` (with ``n_samples``/``sigma_default``)
+    turns the method into an expectation over a path ensemble; the per-row
+    computation is then EXACTLY the riemann method, and reduction (mean over
+    each example's contiguous sample rows) happens after stage 2.
+    """
+
+    name: str
+    accum: str  # accumulator class — hop-executable compatibility key
+    accum_fn: Callable
+    finalize: Callable
+    expand: Optional[Callable] = None
+    n_samples: int = 1
+    sigma_default: float = 0.1
+    description: str = ""
+
+    def row_spec(self) -> "MethodSpec":
+        """The per-row spec with expansion stripped — what the serving engine
+        compiles (it expands requests itself at plan/bucket time)."""
+        if self.expand is None:
+            return self
+        return replace(self, expand=None, n_samples=1)
+
+
+METHODS: dict[str, MethodSpec] = {
+    "ig": MethodSpec(
+        "ig", "riemann", riemann_accum, riemann_finalize,
+        description="vanilla integrated gradients (weighted Riemann sum)",
+    ),
+    "idgi": MethodSpec(
+        "idgi", "idgi", idgi_accum, idgi_finalize,
+        description="IDGI: per-step f-difference split along the gradient direction",
+    ),
+    "noise_tunnel": MethodSpec(
+        "noise_tunnel", "riemann", riemann_accum, riemann_finalize,
+        expand=noise_expand, n_samples=4, sigma_default=0.1,
+        description="SmoothGrad-style expectation of IG over noisy copies of x",
+    ),
+    "expected_grad": MethodSpec(
+        "expected_grad", "riemann", riemann_accum, riemann_finalize,
+        expand=baseline_expand, n_samples=4, sigma_default=0.1,
+        description="expected gradients over a gaussian baseline distribution",
+    ),
+}
+
+
+def get(name: str) -> MethodSpec:
+    if isinstance(name, MethodSpec):
+        return name
+    if name not in METHODS:
+        raise ValueError(
+            f"unknown attribution method {name!r}; known: {sorted(METHODS)}"
+        )
+    return METHODS[name]

@@ -1,6 +1,11 @@
 """Related-work integrations on top of the engine (paper §I: XRAI, Noise
 Tunnel, multi-baseline all *reuse* baseline IG — so all of them inherit the
 NUIG speedup for free; these wrappers demonstrate that composition).
+
+``noise_samples`` is the one shared sampling primitive: the registered
+``noise_tunnel`` MethodSpec (``repro.core.methods``) expands batches through
+it, and the legacy ``noise_tunnel`` wrapper below averages full IGResults
+over the same distribution.
 """
 from __future__ import annotations
 
@@ -10,6 +15,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.ig import IGResult
+
+
+def noise_samples(x: jax.Array, key: jax.Array, n: int, sigma: float) -> jax.Array:
+    """n gaussian-noised copies per example: (B, *F) -> (B·n, *F), samples of
+    example b contiguous at rows [b·n, (b+1)·n) — the layout the MethodSpec
+    expansion/reduction contract assumes (DESIGN.md §8)."""
+    xr = jnp.repeat(x, n, axis=0)
+    noise = jax.random.normal(key, xr.shape) * sigma
+    return (xr + noise.astype(xr.dtype)).astype(x.dtype)
 
 
 def noise_tunnel(

@@ -1,12 +1,22 @@
-"""Fused weighted Riemann-sum accumulation: acc += Σ_k w_k · g_k.
+"""Fused accumulation kernels for the stage-2 hot loop.
 
-The non-uniform interval widths ride in w — stage 2 of the paper is exactly
-this reduction. Fusing keeps the running attribution tile resident in VMEM
-across the K (steps) grid dimension instead of K× read-modify-write round
-trips to HBM (memory-bound op: 1 output write per K-tile instead of K).
+Riemann: acc += Σ_k w_k · g_k. The non-uniform interval widths ride in w —
+stage 2 of the paper is exactly this reduction. Fusing keeps the running
+attribution tile resident in VMEM across the K (steps) grid dimension instead
+of K× read-modify-write round trips to HBM (memory-bound op: 1 output write
+per K-tile instead of K).
 
 Grid: (B, F/Ft, K/Kt) — K is the innermost (sequential) dimension so the
 output tile is revisited with carry semantics; f32 accumulation.
+
+IDGI (DESIGN.md §8) adds the gradient-direction weighting
+``acc += Σ_k c_k g_k²`` with ``c_k = w_k ⟨g_k, diff⟩ / ⟨g_k, g_k⟩``. The two
+inner products reduce over ALL of F, which an F-tiled carry grid cannot see
+at once — so the op runs two passes over the same tiling: a dots kernel
+(grid (B, K/Kt, F/Ft), F innermost, carrying the (1, Kt) partial dots) and a
+squared-grad accumulation kernel that reuses the riemann carry structure with
+the per-(b, k) coefficient in place of the weight. Both passes stay
+memory-bound single reads of g; g² is fused, never materialized in HBM.
 """
 from __future__ import annotations
 
@@ -27,6 +37,96 @@ def _accum_kernel(acc_ref, g_ref, w_ref, o_ref):
     g = g_ref[...].astype(jnp.float32)  # (1, Kt, Ft)
     w = w_ref[...].astype(jnp.float32)  # (1, Kt)
     o_ref[...] += jnp.sum(g * w[..., None], axis=1)  # (1, Ft)
+
+
+def _dots_kernel(g_ref, d_ref, s_ref, p_ref):
+    f = pl.program_id(2)
+
+    @pl.when(f == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+        p_ref[...] = jnp.zeros_like(p_ref)
+
+    g = g_ref[...].astype(jnp.float32)  # (1, Kt, Ft)
+    d = d_ref[...].astype(jnp.float32)  # (1, Ft)
+    s_ref[...] += jnp.sum(g * g, axis=2)  # (1, Kt)
+    p_ref[...] += jnp.sum(g * d[:, None, :], axis=2)
+
+
+def _accum_sq_kernel(acc_ref, g_ref, c_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = acc_ref[...].astype(jnp.float32)
+
+    g = g_ref[...].astype(jnp.float32)  # (1, Kt, Ft)
+    c = c_ref[...].astype(jnp.float32)  # (1, Kt)
+    o_ref[...] += jnp.sum((g * g) * c[..., None], axis=1)  # (1, Ft)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "block_f", "interpret"))
+def idgi_dots_pallas(
+    grads: jax.Array,
+    diff: jax.Array,
+    *,
+    block_k: int = 8,
+    block_f: int = 512,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """grads (B, K, F); diff (B, F) -> (⟨g,g⟩ (B, K) f32, ⟨g,diff⟩ (B, K) f32)."""
+    B, K, F = grads.shape
+    bk, bf = min(block_k, K), min(block_f, F)
+    assert K % bk == 0 and F % bf == 0, (K, bk, F, bf)
+    grid = (B, K // bk, F // bf)
+    return pl.pallas_call(
+        _dots_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bk, bf), lambda b, k, f: (b, k, f)),
+            pl.BlockSpec((1, bf), lambda b, k, f: (b, f)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bk), lambda b, k, f: (b, k)),
+            pl.BlockSpec((1, bk), lambda b, k, f: (b, k)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, K), jnp.float32),
+            jax.ShapeDtypeStruct((B, K), jnp.float32),
+        ],
+        interpret=interpret,
+    )(grads, diff)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "block_f", "interpret"))
+def ig_accum_sq_pallas(
+    acc: jax.Array,
+    grads: jax.Array,
+    coeff: jax.Array,
+    *,
+    block_k: int = 8,
+    block_f: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """acc (B, F) f32; grads (B, K, F); coeff (B, K) -> (B, F) f32.
+
+    out = acc + Σ_k coeff_k · g_k² — the IDGI weighting pass (g² fused)."""
+    B, K, F = grads.shape
+    bk, bf = min(block_k, K), min(block_f, F)
+    assert K % bk == 0 and F % bf == 0, (K, bk, F, bf)
+    grid = (B, F // bf, K // bk)
+    return pl.pallas_call(
+        _accum_sq_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bf), lambda b, f, k: (b, f)),
+            pl.BlockSpec((1, bk, bf), lambda b, f, k: (b, k, f)),
+            pl.BlockSpec((1, bk), lambda b, f, k: (b, k)),
+        ],
+        out_specs=pl.BlockSpec((1, bf), lambda b, f, k: (b, f)),
+        out_shape=jax.ShapeDtypeStruct((B, F), jnp.float32),
+        interpret=interpret,
+    )(acc, grads, coeff)
 
 
 @functools.partial(jax.jit, static_argnames=("block_k", "block_f", "interpret"))

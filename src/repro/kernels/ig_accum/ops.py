@@ -1,12 +1,33 @@
-"""jit'd public wrapper + engine adapter for the accumulation kernel."""
+"""jit'd public wrappers + engine adapters for the accumulation kernels.
+
+Both wrappers honor the MethodSpec accumulator signature
+``(acc, grads, weights, *, diff, mask)`` (DESIGN.md §8), so they drop into
+``ig.attribute(accum_fn=...)`` for their method: ``ig_accum`` for every
+riemann-class method (ig / noise_tunnel / expected_grad — ``diff`` is
+accepted and ignored), ``ig_accum_idgi`` for IDGI. ``accum_fn_for`` maps an
+accumulator class name to its kernel.
+"""
 from __future__ import annotations
+
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.ig_accum.kernel import ig_accum_pallas
-from repro.kernels.ig_accum.ref import ig_accum_ref
+from repro.kernels.ig_accum.kernel import (
+    idgi_dots_pallas,
+    ig_accum_pallas,
+    ig_accum_sq_pallas,
+)
+from repro.kernels.ig_accum.ref import ig_accum_idgi_ref, ig_accum_ref
+
+
+def _mask_grads(grads: jax.Array, mask: jax.Array) -> jax.Array:
+    mm = mask.reshape(
+        mask.shape[:1] + (1,) + mask.shape[1:] + (1,) * (grads.ndim - mask.ndim - 1)
+    )
+    return grads * mm.astype(grads.dtype)
 
 
 def ig_accum(
@@ -14,22 +35,21 @@ def ig_accum(
     grads: jax.Array,
     weights: jax.Array,
     *,
-    mask: jax.Array = None,
+    diff: Optional[jax.Array] = None,
+    mask: Optional[jax.Array] = None,
     block_k: int = 8,
     block_f: int = 512,
     interpret: bool = True,
 ) -> jax.Array:
-    """Engine-compatible drop-in for the default accumulator.
+    """Engine-compatible drop-in for the riemann accumulator.
 
     acc: (B, *F) f32; grads: (B, K, *F); weights: (B, K) -> (B, *F) f32.
+    diff: accepted for signature uniformity (riemann ignores the direction).
     mask: optional (B, *L) real-position mask — padded-position gradients
     are zeroed before accumulation (bucketed serving; DESIGN.md §6).
     """
     if mask is not None:
-        mm = mask.reshape(
-            mask.shape[:1] + (1,) + mask.shape[1:] + (1,) * (grads.ndim - mask.ndim - 1)
-        )
-        grads = grads * mm.astype(grads.dtype)
+        grads = _mask_grads(grads, mask)
     B = acc.shape[0]
     feat = acc.shape[1:]
     F = int(np.prod(feat))
@@ -50,4 +70,54 @@ def ig_accum(
     return out[:, :F].reshape((B,) + feat)
 
 
-__all__ = ["ig_accum", "ig_accum_ref"]
+def ig_accum_idgi(
+    acc: jax.Array,
+    grads: jax.Array,
+    weights: jax.Array,
+    *,
+    diff: jax.Array,
+    mask: Optional[jax.Array] = None,
+    block_k: int = 8,
+    block_f: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """Engine-compatible drop-in for the IDGI accumulator (two fused passes).
+
+    acc: (B, *F) f32; grads: (B, K, *F); weights: (B, K); diff: (B, *F)
+    -> (B, *F) f32 = acc + Σ_k w_k ⟨g_k, diff⟩/⟨g_k, g_k⟩ · g_k².
+    Zero-padding K/F is safe: padded features contribute 0 to both inner
+    products and padded steps get coefficient w=0.
+    """
+    if mask is not None:
+        grads = _mask_grads(grads, mask)
+    B = acc.shape[0]
+    feat = acc.shape[1:]
+    F = int(np.prod(feat))
+    K = grads.shape[1]
+    pad_f = (-F) % block_f
+    pad_k = (-K) % block_k
+    af = jnp.pad(acc.reshape(B, F), ((0, 0), (0, pad_f)))
+    gf = jnp.pad(grads.reshape(B, K, F), ((0, 0), (0, pad_k), (0, pad_f)))
+    wf = jnp.pad(weights, ((0, 0), (0, pad_k)))
+    df = jnp.pad(diff.reshape(B, F), ((0, 0), (0, pad_f)))
+    bk = min(block_k, K + pad_k)
+    bf = min(block_f, F + pad_f)
+    s, p = idgi_dots_pallas(gf, df, block_k=bk, block_f=bf, interpret=interpret)
+    coeff = (
+        wf.astype(jnp.float32)
+        * p
+        * jnp.where(s > 0.0, 1.0 / jnp.where(s > 0.0, s, 1.0), 0.0)
+    )
+    out = ig_accum_sq_pallas(af, gf, coeff, block_k=bk, block_f=bf, interpret=interpret)
+    return out[:, :F].reshape((B,) + feat)
+
+
+def accum_fn_for(accum: str) -> Callable:
+    """Pallas kernel for a MethodSpec accumulator class name."""
+    table = {"riemann": ig_accum, "idgi": ig_accum_idgi}
+    if accum not in table:
+        raise ValueError(f"unknown accumulator class {accum!r}; known: {sorted(table)}")
+    return table[accum]
+
+
+__all__ = ["ig_accum", "ig_accum_idgi", "ig_accum_ref", "ig_accum_idgi_ref", "accum_fn_for"]

@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the weighted Riemann accumulation kernel."""
+"""Pure-jnp oracles for the accumulation kernels (riemann + IDGI)."""
 from __future__ import annotations
 
 import jax
@@ -13,3 +13,20 @@ def ig_accum_ref(acc: jax.Array, grads: jax.Array, weights: jax.Array) -> jax.Ar
     return acc + jnp.einsum(
         "bkf,bk->bf", grads.astype(jnp.float32), weights.astype(jnp.float32)
     )
+
+
+def ig_accum_idgi_ref(
+    acc: jax.Array, grads: jax.Array, weights: jax.Array, diff: jax.Array
+) -> jax.Array:
+    """IDGI accumulation (repro.core.methods.idgi_accum, DESIGN.md §8).
+
+    acc: (B, F) f32; grads: (B, K, F); weights: (B, K); diff: (B, F).
+    out[b, f] = acc[b, f] + Σ_k c[b, k] * grads[b, k, f]²
+    with  c[b, k] = weights[b, k] · ⟨g_k, diff⟩ / ⟨g_k, g_k⟩  (0 where ⟨g,g⟩=0).
+    """
+    g = grads.astype(jnp.float32)
+    d = diff.astype(jnp.float32)
+    s = jnp.einsum("bkf,bkf->bk", g, g)
+    p = jnp.einsum("bkf,bf->bk", g, d)
+    c = weights.astype(jnp.float32) * p * jnp.where(s > 0.0, 1.0 / jnp.where(s > 0.0, s, 1.0), 0.0)
+    return acc + jnp.einsum("bkf,bk->bf", g * g, c)

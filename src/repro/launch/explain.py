@@ -1,13 +1,17 @@
 """Explanation-serving driver — the paper's low-latency XAI under traffic.
 
     PYTHONPATH=src python -m repro.launch.explain --arch llama3-8b \
-        --method paper --m 64 --n-int 4 --requests 16 --rounds 3
+        --method idgi --schedule paper --m 64 --n-int 4 --requests 16 --rounds 3
 
 Drives the shape-bucketed ExplainEngine with MIXED-LENGTH request traffic
 (random prompt lengths in [--min-seq, --max-seq]): round 1 pays the per-bucket
 compilations, later rounds ride the compiled-executable cache. Prints
-per-bucket latency, compile time, and the cache hit-rate, then the paper-vs-
-uniform convergence comparison at the same step budget.
+per-bucket latency, compile time, and the cache hit-rate, then the chosen
+schedule vs uniform convergence comparison at the same step budget.
+
+``--method`` picks the attribution method from the ``repro.core.methods``
+registry (see the table in ``--help``); ``--schedule`` picks the
+interpolation schedule family — the two compose freely (DESIGN.md §8).
 """
 from __future__ import annotations
 
@@ -18,6 +22,7 @@ import jax
 import numpy as np
 
 from repro.configs import ARCHS, get_config, reduced
+from repro.core.methods import METHODS
 from repro.core.schedule import SCHEDULES
 from repro.models.registry import Model
 from repro.serve import ExplainEngine, ExplainRequest
@@ -31,6 +36,21 @@ def make_traffic(cfg, n: int, lo: int, hi: int, rng) -> list[ExplainRequest]:
         )
         for s in rng.integers(lo, hi + 1, size=n)
     ]
+
+
+def methods_table() -> str:
+    """The registry, rendered for --help (DESIGN.md §8)."""
+    lines = ["attribution methods (--method):"]
+    for name in sorted(METHODS):
+        spec = METHODS[name]
+        extra = (
+            f" [accum={spec.accum}, n_samples={spec.n_samples}]"
+            if spec.expand is not None
+            else f" [accum={spec.accum}]"
+        )
+        lines.append(f"  {name:14s} {spec.description}{extra}")
+    lines.append("schedule families (--schedule): " + ", ".join(sorted(SCHEDULES)))
+    return "\n".join(lines)
 
 
 def report(engine: ExplainEngine) -> None:
@@ -63,9 +83,19 @@ def report(engine: ExplainEngine) -> None:
 
 
 def main() -> int:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+        epilog=methods_table(),
+    )
     ap.add_argument("--arch", default="llama3-8b", choices=sorted(ARCHS))
-    ap.add_argument("--method", default="paper", choices=sorted(SCHEDULES))
+    ap.add_argument(
+        "--method", default="ig", choices=sorted(METHODS),
+        help="attribution method (see table below)",
+    )
+    ap.add_argument(
+        "--schedule", default="paper", choices=sorted(SCHEDULES),
+        help="interpolation schedule family",
+    )
     ap.add_argument("--m", type=int, default=64)
     ap.add_argument("--n-int", type=int, default=4)
     ap.add_argument("--requests", type=int, default=16, help="requests per round")
@@ -80,6 +110,14 @@ def main() -> int:
     )
     ap.add_argument("--tol", type=float, default=1e-2, help="relative δ tolerance")
     ap.add_argument("--m-max", type=int, default=0, help="ladder top (default 8·m)")
+    ap.add_argument(
+        "--n-samples", type=int, default=0,
+        help="path-ensemble size for noise_tunnel/expected_grad (0 = method default)",
+    )
+    ap.add_argument(
+        "--sigma", type=float, default=0.0,
+        help="ensemble perturbation scale (0 = method default)",
+    )
     args = ap.parse_args()
 
     cfg = reduced(get_config(args.arch))
@@ -90,19 +128,24 @@ def main() -> int:
     rng = np.random.default_rng(args.seed)
 
     out = None
-    for method in (args.method, "uniform"):
+    compare = (args.schedule,) if args.schedule == "uniform" else (args.schedule, "uniform")
+    for sched_name in compare:
         engine = ExplainEngine(
             cfg,
             params,
-            method=method,
+            method=args.method,
+            schedule=sched_name,
             m=args.m,
             n_int=args.n_int,
             adaptive=args.adaptive,
             tol=args.tol,
             m_max=args.m_max,
+            n_samples=args.n_samples,
+            sigma=args.sigma,
         )
         mode = f"adaptive tol={args.tol} ladder={engine.m_ladder}" if args.adaptive else f"m={args.m}"
-        print(f"method={method} {mode} "
+        samples = f" samples={engine.n_samples}" if engine.n_samples > 1 else ""
+        print(f"method={args.method} schedule={sched_name} {mode}{samples} "
               f"traffic={args.rounds}x{args.requests} reqs S∈[{args.min_seq},{args.max_seq}]")
         for rnd in range(args.rounds):
             reqs = make_traffic(cfg, args.requests, args.min_seq, args.max_seq, rng)

@@ -9,12 +9,20 @@ hot compiled program. This engine makes that true under real traffic:
   * padded positions are masked out of the stage-1 probe and the stage-2
     attribution/δ (see ``repro.core.ig.attribute``'s ``mask``) — they receive
     exactly zero attribution and δ is over real tokens only;
-  * one executable per ``(bucket_shape, method, m, n_int, chunk)`` key is
-    AOT-compiled (``jit(...).lower(...).compile()``) and cached, so
-    steady-state traffic never recompiles — the cache and its hit/miss/latency
-    stats are first-class, inspectable state;
+  * one executable per ``(bucket_shape, accumulator, schedule, m, n_int,
+    chunk)`` key is AOT-compiled (``jit(...).lower(...).compile()``) and
+    cached, so steady-state traffic never recompiles — the cache and its
+    hit/miss/latency stats are first-class, inspectable state;
   * every schedule family in ``repro.core.schedule.SCHEDULES`` rides the same
-    compiled path (the registry's uniform builder signature);
+    compiled path (the registry's uniform builder signature), and so does
+    every attribution method in ``repro.core.methods.METHODS`` (DESIGN.md §8):
+    executables are keyed by the method's accumulator CLASS (``spec.accum``),
+    so ``ig``/``noise_tunnel``/``expected_grad`` share one warmed riemann set
+    and ``idgi`` compiles its own — either way the shape set stays closed.
+    Path-ensemble methods are served by replicating each request
+    ``n_samples``× at plan time and perturbing rows in embedding space at
+    batch-construction time (outside the compiled program), then averaging
+    each request's contiguous sample results;
   * an optional mesh shards the folded (batch × step) stage-2 axis via the
     pjit specs in ``repro.sharding`` (``explain_shardings``).
 
@@ -42,7 +50,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core import ig
+from repro.core import ig, methods as methods_mod
 from repro.core.api import Explainer
 from repro.core.baselines import pad_embedding
 from repro.core.probes import probe_cost
@@ -79,7 +87,9 @@ class BucketStats:
 @dataclass
 class AdaptiveStats:
     """Aggregate δ-feedback serving counters (per-request values ride on the
-    result dicts: ``m_used``, ``delta``, ``hops``, ``converged``)."""
+    result dicts: ``m_used``, ``delta``, ``hops``, ``converged``). For
+    path-ensemble methods every counter is per served ROW (sample), i.e.
+    ``n_samples``× the user-visible request count."""
 
     requests: int = 0  # requests served adaptively
     converged: int = 0  # requests that reached δ ≤ tol·|f_x − f_b|
@@ -132,7 +142,8 @@ class ExplainEngine:
         cfg: ArchConfig,
         params: Any,
         *,
-        method: str = "paper",
+        method: str = "ig",
+        schedule: str = "paper",
         m: int = 64,
         n_int: int = 4,
         chunk: int = 0,
@@ -146,10 +157,15 @@ class ExplainEngine:
         adaptive: bool = False,
         tol: float = 1e-2,
         m_max: int = 0,
+        n_samples: int = 0,
+        sigma: float = 0.0,
+        sample_seed: int = 0,
     ):
         self.cfg = cfg
         self.params = params
         self.method = method
+        self.schedule = schedule
+        self._spec = methods_mod.get(method)
         self.m = m
         self.n_int = n_int
         self.chunk = chunk
@@ -162,12 +178,23 @@ class ExplainEngine:
         self.tol = tol
         self.m_max = m_max if m_max else (8 * m if adaptive else m)
         self.m_ladder = m_ladder(m, self.m_max)
+        # path-ensemble serving: each request becomes n_samples plan rows
+        self.n_samples = (
+            (n_samples if n_samples else self._spec.n_samples)
+            if self._spec.expand is not None
+            else 1
+        )
+        self.sigma = sigma if sigma else self._spec.sigma_default
+        self.sample_seed = sample_seed
         self.model = Model(cfg)
         self.stats = EngineStats()
         self._cache: dict[tuple, Any] = {}  # key -> compiled executable
+        # the compiled per-row unit: expansion stripped (row_spec) — the
+        # engine samples the ensemble itself at batch-construction time
         self._explainer = Explainer(
             self.model.target_logprob_at_fn(params),
-            method=method,
+            method=self._spec.row_spec(),
+            schedule=schedule,
             m=m,
             n_int=n_int,
             chunk=chunk,
@@ -178,7 +205,9 @@ class ExplainEngine:
     # -- compiled-executable cache ----------------------------------------
 
     def _key(self, bucket: tuple[int, int]) -> tuple:
-        return (bucket, self.method, self.m, self.n_int, self.chunk)
+        # keyed by accumulator CLASS, not method name: methods sharing an
+        # accumulator share the warmed executables (DESIGN.md §8)
+        return (bucket, self._spec.accum, self.schedule, self.m, self.n_int, self.chunk)
 
     def _attr_fn(self, embeds, baseline, aux, mask):
         return self._explainer.attribute(embeds, baseline, aux, mask=mask)
@@ -248,6 +277,20 @@ class ExplainEngine:
         baseline = pad_embedding(
             self.params["embed"]["embedding"], embeds, pad_id=self.pad_id
         )
+        if self._spec.expand is not None:
+            # path-ensemble perturbation in embedding space: rows are already
+            # replicated requests (see explain()), so each row draws its own
+            # iid sample here — OUTSIDE the compiled program, which is what
+            # keeps ensemble methods on the shared riemann executables. The
+            # key is a pure function of the bucket's (expanded) request
+            # indices, NOT a call counter: replayed traffic must draw the
+            # same ensemble so its escalation path — and therefore the set
+            # of hop shapes it touches — replays exactly (zero recompiles).
+            key = jax.random.PRNGKey(self.sample_seed)
+            key = jax.random.fold_in(key, bb.bucket[1])
+            for i in bb.indices:
+                key = jax.random.fold_in(key, i)
+            embeds, baseline = self._spec.expand(embeds, baseline, key, 1, self.sigma)
         return embeds, baseline, aux, mask
 
     def _run_bucket(self, bb: BucketBatch) -> Any:
@@ -278,7 +321,8 @@ class ExplainEngine:
         S = bb.bucket[1]
         chunk = self._explainer.adaptive_chunk
         args = self._bucket_inputs(bb)
-        key = ("start", bb.bucket, self.method, self.m, self.n_int, chunk)
+        key = ("start", bb.bucket, self._spec.accum, self.schedule, self.m,
+               self.n_int, chunk)
         bs = self.stats.bucket(bb.bucket)
         fn = self._executable(key, bs, self._start_fn, args)
         res, state, sched = self._timed_call(bs, fn, args)
@@ -292,7 +336,7 @@ class ExplainEngine:
         # per-real-request like total_steps (pad-row forwards are launch
         # overhead, visible via launched_steps' bucket padding instead)
         ast.probe_forwards += n_real * probe_cost(
-            family(self.method).probe,
+            family(self.schedule).probe,
             n_int=self.n_int,
             rounds=self._explainer.refine_rounds,
         )
@@ -318,7 +362,7 @@ class ExplainEngine:
             if not act:
                 break
             n_new = rung // 2
-            refined = family(self.method).refine(
+            refined = family(self.schedule).refine(
                 Schedule(jnp.asarray(a_act), jnp.asarray(w_act))
             )
             ra, rw = np.asarray(refined.alphas), np.asarray(refined.weights)
@@ -335,7 +379,7 @@ class ExplainEngine:
                 Schedule(ra[pad_sel, n_new:], rw[pad_sel, n_new:]),
                 ig.IGState(acc_act[pad_sel], f_x[rows], f_b[rows]),
             )
-            hop_key = ("hop", hop_bucket, n_new, chunk)
+            hop_key = ("hop", hop_bucket, self._spec.accum, n_new, chunk)
             hbs = self.stats.hop_bucket(hop_bucket)
             hop = self._executable(hop_key, hbs, self._hop_fn, hop_args)
             res2, st2 = self._timed_call(hbs, hop, hop_args)
@@ -381,6 +425,30 @@ class ExplainEngine:
             )
         return out
 
+    @staticmethod
+    def _reduce_samples(group: list[dict]) -> dict:
+        """Average one request's contiguous sample results (path-ensemble
+        methods). δ is recomputed on the reduced quantities — the gap of the
+        expectation, not the mean of per-sample gaps."""
+        if len(group) == 1:
+            return group[0]
+        r = dict(group[0])
+        mean = lambda k: np.mean([g[k] for g in group], axis=0)
+        r["token_scores"] = mean("token_scores")
+        if "raw_token_scores" in r:
+            r["raw_token_scores"] = mean("raw_token_scores")
+        r["f_x"] = float(mean("f_x"))
+        r["f_baseline"] = float(mean("f_baseline"))
+        r["delta"] = float(
+            abs(float(np.sum(r["token_scores"])) - (r["f_x"] - r["f_baseline"]))
+        )
+        if "m_used" in r:  # adaptive: the request pays its worst sample
+            r["m_used"] = max(g["m_used"] for g in group)
+            r["hops"] = max(g["hops"] for g in group)
+            r["threshold"] = float(mean("threshold"))
+            r["converged"] = all(g["converged"] for g in group)
+        return r
+
     def explain(
         self, requests: Sequence[ExplainRequest], *, return_raw: bool = False
     ) -> list[dict]:
@@ -392,15 +460,25 @@ class ExplainEngine:
         mode every dict additionally reports ``m_used`` (the rung the request
         exited at), ``hops``, ``threshold`` (tol·|f_x − f_baseline|) and
         ``converged``.
+
+        Path-ensemble methods (noise_tunnel / expected_grad): each request is
+        replicated ``n_samples``× at plan time, rows are perturbed in
+        embedding space at batch construction, and each request's sample
+        results are averaged back into one dict — so the per-request
+        contract above is method-independent.
         """
+        n = self.n_samples
+        expanded = (
+            list(requests) if n == 1 else [r for r in requests for _ in range(n)]
+        )
         plan = plan_buckets(
-            requests,
+            expanded,
             seq_buckets=self.seq_buckets,
             batch_buckets=self.batch_buckets,
             max_batch=self.max_batch,
             pad_id=self.pad_id,
         )
-        out: list[Optional[dict]] = [None] * len(requests)
+        out: list[Optional[dict]] = [None] * len(expanded)
         for bb in plan:
             if self.adaptive:
                 for r in self._run_bucket_adaptive(bb):
@@ -422,4 +500,9 @@ class ExplainEngine:
                 if return_raw:
                     r["raw_token_scores"] = per_token[row]
                 out[ri] = r
-        return out
+        if n == 1:
+            return out
+        return [
+            self._reduce_samples(out[i * n : (i + 1) * n])
+            for i in range(len(requests))
+        ]

@@ -3,8 +3,11 @@
 The batched-IG serving logic lives in ``repro.serve.explain_engine`` now —
 shape-bucketed batching, masked padding, and the compiled-executable cache.
 This shim keeps the original one-model/one-method constructor and the
-``explain(requests) -> list[dict]`` contract, with one upgrade: requests no
-longer need equal sequence lengths (they are bucketed and masked).
+``explain(requests) -> list[dict]`` contract, with two upgrades: requests no
+longer need equal sequence lengths (they are bucketed and masked), and
+``method`` now names an attribution method from ``repro.core.methods``
+(ig / idgi / noise_tunnel / expected_grad) while ``schedule`` names the
+interpolation schedule family (uniform / paper / warp / gauss / refine).
 """
 from __future__ import annotations
 
@@ -21,23 +24,28 @@ __all__ = ["ExplainService", "ExplainRequest"]
 class ExplainService:
     cfg: ArchConfig
     params: Any
-    method: str = "paper"
+    method: str = "ig"  # attribution method (repro.core.methods.METHODS)
+    schedule: str = "paper"  # schedule family (repro.core.schedule.SCHEDULES)
     m: int = 64
     n_int: int = 4
     chunk: int = 0
-    pad_id: int = 0  # baseline token (see ExplainEngine._run_bucket)
+    pad_id: int = 0  # baseline token (see ExplainEngine._bucket_inputs)
     # adaptive iso-convergence (DESIGN.md §7): m becomes the base rung of a
     # pow-2 ladder topping out at m_max; requests exit as soon as
     # δ ≤ tol·|f_x − f_baseline| and report their per-request m_used.
     adaptive: bool = False
     tol: float = 1e-2
     m_max: int = 0
+    # path-ensemble methods (0/0.0 = the method's registered defaults)
+    n_samples: int = 0
+    sigma: float = 0.0
 
     def __post_init__(self):
         self._engine = ExplainEngine(
             self.cfg,
             self.params,
             method=self.method,
+            schedule=self.schedule,
             m=self.m,
             n_int=self.n_int,
             chunk=self.chunk,
@@ -45,6 +53,8 @@ class ExplainService:
             adaptive=self.adaptive,
             tol=self.tol,
             m_max=self.m_max,
+            n_samples=self.n_samples,
+            sigma=self.sigma,
         )
 
     @property
@@ -52,5 +62,5 @@ class ExplainService:
         return self._engine
 
     def explain(self, requests: list[ExplainRequest]) -> list[dict]:
-        """Bucket the requests (any S), run NUIG, return per-token scores."""
+        """Bucket the requests (any S), run the method, return token scores."""
         return self._engine.explain(requests)

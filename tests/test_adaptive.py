@@ -36,7 +36,7 @@ def quad_f(xs, t):
 
 def _materialize_ladder(ex: Explainer, x, bl, t, hops: int) -> Schedule:
     """The nested schedule a full-ladder run lands on: base build + refines."""
-    fam = schedule.family(ex.method)
+    fam = schedule.family(ex.schedule)
     sched = ex.build_schedule(x, bl, t)
     a = jnp.broadcast_to(sched.alphas, (x.shape[0], sched.alphas.shape[-1]))
     w = jnp.broadcast_to(sched.weights, a.shape)
@@ -49,8 +49,8 @@ def _materialize_ladder(ex: Explainer, x, bl, t, hops: int) -> Schedule:
 # ------------------------------------------------- (a) bit-identity, core
 
 
-@pytest.mark.parametrize("method", ["uniform", "paper"])
-def test_full_ladder_bit_identical_to_fixed_run(method):
+@pytest.mark.parametrize("schedule_name", ["uniform", "paper"])
+def test_full_ladder_bit_identical_to_fixed_run(schedule_name):
     """tol=0 never converges -> every example rides the whole ladder; the
     result must equal one fixed run over the final nested schedule, bit for
     bit (old weights halve by exact power-of-two scaling and chunk
@@ -62,7 +62,7 @@ def test_full_ladder_bit_identical_to_fixed_run(method):
     x = jax.random.normal(KEY, (3, 8)) + 1.0
     bl = jnp.zeros_like(x)
     t = jnp.zeros((3,), jnp.int32)
-    ex = Explainer(f, method=method, m=4, n_int=2)
+    ex = Explainer(f, schedule=schedule_name, m=4, n_int=2)
     res, info = ex.attribute_adaptive(x, bl, t, tol=0.0, m_max=16)
     assert list(info["m_used"]) == [16, 16, 16] and list(info["hops"]) == [2, 2, 2]
     assert not info["converged"].any()
@@ -87,7 +87,7 @@ def test_full_ladder_bit_identical_cnn():
     x = jax.random.uniform(jax.random.fold_in(KEY, 1), (2, s, s, CNN_CONFIG.channels))
     bl = jnp.zeros_like(x)
     t = jnp.zeros((2,), jnp.int32)
-    ex = Explainer(f, method="paper", m=4, n_int=2)
+    ex = Explainer(f, schedule="paper", m=4, n_int=2)
     res, info = ex.attribute_adaptive(x, bl, t, tol=0.0, m_max=8)
     assert list(info["m_used"]) == [8, 8]
 
@@ -113,7 +113,7 @@ def test_m_used_and_hops_match_hand_trace():
     bl = jnp.zeros_like(x)
     t = jnp.zeros((4,), jnp.int32)
     tol, m_max = 2e-3, 32
-    ex = Explainer(f, method="paper", m=4, n_int=2)
+    ex = Explainer(f, schedule="paper", m=4, n_int=2)
     res, info = ex.attribute_adaptive(x, bl, t, tol=tol, m_max=m_max)
 
     ladder = schedule.m_ladder(4, m_max)
@@ -181,7 +181,7 @@ def test_engine_full_ladder_bit_identical_lm(lm):
     cfg, model, params = lm
     reqs = _requests(cfg, (11, 9, 12, 10))  # one (4, 16) bucket
     eng = ExplainEngine(
-        cfg, params, method="paper", m=4, n_int=4, adaptive=True, tol=0.0, m_max=16
+        cfg, params, schedule="paper", m=4, n_int=4, adaptive=True, tol=0.0, m_max=16
     )
     out = eng.explain(reqs, return_raw=True)
     assert all(o["m_used"] == 16 and o["hops"] == 2 for o in out)
@@ -195,7 +195,7 @@ def test_engine_full_ladder_bit_identical_lm(lm):
     embeds, baseline, aux, mask = args
     chunk = eng._explainer.adaptive_chunk
     start = eng._executable(
-        ("start", bb.bucket, "paper", 4, 4, chunk),
+        ("start", bb.bucket, "riemann", "paper", 4, 4, chunk),
         eng.stats.bucket(bb.bucket),
         eng._start_fn,
         args,
@@ -209,7 +209,7 @@ def test_engine_full_ladder_bit_identical_lm(lm):
     )
     fixed_args = (embeds, baseline, aux, mask, sched, zero_state)
     fixed_fn = eng._executable(
-        ("hop", bb.bucket, 16, chunk),
+        ("hop", bb.bucket, "riemann", 16, chunk),
         eng.stats.hop_bucket(bb.bucket),
         eng._hop_fn,
         fixed_args,
@@ -227,7 +227,7 @@ def test_engine_adaptive_stats_and_results(lm):
     cfg, _, params = lm
     reqs = _requests(cfg, (9, 17, 24, 12), seed=3)
     eng = ExplainEngine(
-        cfg, params, method="paper", m=8, n_int=4, adaptive=True, tol=1e-2, m_max=32
+        cfg, params, schedule="paper", m=8, n_int=4, adaptive=True, tol=1e-2, m_max=32
     )
     out = eng.explain(reqs)
     a = eng.stats.adaptive
@@ -255,7 +255,7 @@ def test_engine_adaptive_zero_recompiles_on_replay(lm):
     cfg, _, params = lm
     reqs = _requests(cfg, (9, 17, 24, 12, 9, 30), seed=5)
     eng = ExplainEngine(
-        cfg, params, method="paper", m=8, n_int=4, adaptive=True, tol=5e-3, m_max=32
+        cfg, params, schedule="paper", m=8, n_int=4, adaptive=True, tol=5e-3, m_max=32
     )
     eng.explain(reqs)
     misses = eng.stats.misses
@@ -270,9 +270,9 @@ def test_engine_adaptive_matches_fixed_when_tol_loose(lm):
     cfg, _, params = lm
     reqs = _requests(cfg, (9, 17), seed=7)
     ad = ExplainEngine(
-        cfg, params, method="paper", m=8, n_int=4, adaptive=True, tol=1e6
+        cfg, params, schedule="paper", m=8, n_int=4, adaptive=True, tol=1e6
     )
-    fx = ExplainEngine(cfg, params, method="paper", m=8, n_int=4)
+    fx = ExplainEngine(cfg, params, schedule="paper", m=8, n_int=4)
     out_a = ad.explain(reqs)
     out_f = fx.explain(reqs)
     for oa, of in zip(out_a, out_f):

@@ -34,7 +34,7 @@ def test_ig_on_pixels():
     x = jax.random.uniform(KEY, (2, 32, 32, 3))
     bl = jnp.zeros_like(x)  # black-image baseline
     t = jnp.zeros((2,), jnp.int32)
-    ex = Explainer(f, method="paper", m=16, n_int=4)
+    ex = Explainer(f, schedule="paper", m=16, n_int=4)
     res = ex.attribute(x, bl, t)
     assert res.attributions.shape == x.shape
     assert bool(jnp.all(jnp.isfinite(res.attributions)))

@@ -1,0 +1,245 @@
+"""Property-based conformance suite: every method × every schedule family.
+
+The MethodSpec contract (DESIGN.md §8) is a set of PROPERTIES, not examples —
+this suite states each one as a checker and drives it two ways:
+
+  * a deterministic grid over the full METHODS × SCHEDULES cross product
+    (always runs, pinning the whole zoo in the tier-1 matrix);
+  * hypothesis ``@given`` wrappers over randomized shapes/models/schedules
+    (run wherever hypothesis is installed — CI installs it via
+    requirements-dev.txt; locally the grid half still covers the product).
+
+Properties:
+  P1  completeness on a linear model is EXACT for every method × family
+      (δ ≈ 0 at machine precision, any m): linearity is the one regime where
+      quadrature error vanishes, so any leak here is a method bug;
+  P2  Σw == 1 after ``refine_nested`` — exactly, for arbitrary schedules —
+      and old nodes keep their α with exactly-halved weights;
+  P3  masked padding positions receive EXACTLY zero attribution (not small:
+      zero) for every method, and δ is finite;
+  P4  adaptive resume is bit-identical to the fixed-m run over the
+      materialized refined schedule, for every method's state pytree ×
+      family (the IGState contract that δ-adaptive serving rests on).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ig, methods, schedule
+from repro.core.api import Explainer
+from repro.core.schedule import Schedule
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised in CI where it IS present
+    HAVE_HYPOTHESIS = False
+
+KEY = jax.random.PRNGKey(0)
+ALL_METHODS = sorted(methods.METHODS)
+ALL_SCHEDULES = sorted(schedule.SCHEDULES)
+GRID = [(m, s) for m in ALL_METHODS for s in ALL_SCHEDULES]
+
+
+def _explainer(f, method, sched_name, m=16, n_int=4, **kw):
+    kw.setdefault("n_samples", 2)
+    kw.setdefault("sigma", 0.15)
+    return Explainer(f, method=method, schedule=sched_name, m=m, n_int=n_int, **kw)
+
+
+# ----------------------------------------------------- P1: linear exactness
+
+
+def check_linear_exact(method, sched_name, a, x, tol=2e-4):
+    """δ == 0 (machine precision) on f(x) = ⟨a, x⟩ for any schedule/m."""
+
+    def f(xs, t):
+        return xs @ a
+
+    bl = jnp.zeros_like(x)
+    t = jnp.zeros((x.shape[0],), jnp.int32)
+    res = _explainer(f, method, sched_name).attribute(x, bl, t)
+    scale = float(jnp.abs(res.f_x - res.f_baseline).max()) + 1.0
+    np.testing.assert_allclose(np.asarray(res.delta), 0.0, atol=tol * scale)
+
+
+@pytest.mark.parametrize("method,sched_name", GRID)
+def test_linear_exact_grid(method, sched_name):
+    a = jax.random.normal(KEY, (8,))
+    x = jax.random.normal(jax.random.fold_in(KEY, 1), (3, 8))
+    check_linear_exact(method, sched_name, a, x)
+
+
+# --------------------------------------------- P2: refine_nested invariants
+
+
+def check_refine_invariants(alphas, weights):
+    """Σw == 1 exactly after refinement; old nodes keep α, weights halve."""
+    sched = Schedule(jnp.asarray(alphas, jnp.float32), jnp.asarray(weights, jnp.float32))
+    ref = schedule.refine_nested(sched)
+    m = sched.alphas.shape[-1]
+    assert ref.alphas.shape[-1] == 2 * m
+    np.testing.assert_array_equal(
+        np.asarray(ref.alphas)[..., :m], np.asarray(sched.alphas)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(ref.weights)[..., :m], 0.5 * np.asarray(sched.weights)
+    )
+    np.testing.assert_allclose(
+        np.asarray(ref.weights.sum(-1)),
+        np.asarray(sched.weights.sum(-1)),
+        rtol=1e-6,
+    )
+    a2 = np.asarray(ref.alphas)
+    assert np.all((a2 >= 0.0) & (a2 <= 1.0))
+
+
+@pytest.mark.parametrize("sched_name", ALL_SCHEDULES)
+@pytest.mark.parametrize("m", [4, 8, 16])
+def test_refine_invariants_grid(sched_name, m):
+    def f(xs, t):
+        return jnp.tanh((xs**2).sum(-1) / 10.0)
+
+    x = jax.random.normal(KEY, (2, 6)) + 1.0
+    ex = Explainer(f, schedule=sched_name, m=m, n_int=2)
+    s = ex.build_schedule(x, jnp.zeros_like(x), jnp.zeros((2,), jnp.int32))
+    check_refine_invariants(s.alphas, s.weights)
+
+
+# ------------------------------------------------- P3: exact masked zeros
+
+
+def check_masked_zero(method, sched_name):
+    def f(xs, t):
+        return jnp.tanh((xs**2).sum(-1) / 10.0)
+
+    x = jax.random.normal(KEY, (3, 8)) + 1.0
+    bl = jnp.zeros_like(x)
+    t = jnp.zeros((3,), jnp.int32)
+    mask = jnp.asarray(np.tril(np.ones((3, 8), np.float32), k=4))  # ragged
+    res = _explainer(f, method, sched_name).attribute(x, bl, t, mask)
+    attr = np.asarray(res.attributions)
+    assert np.all(attr[np.asarray(mask) == 0.0] == 0.0), "padding must attribute 0"
+    assert np.isfinite(np.asarray(res.delta)).all()
+
+
+@pytest.mark.parametrize("method,sched_name", GRID)
+def test_masked_zero_grid(method, sched_name):
+    check_masked_zero(method, sched_name)
+
+
+# --------------------------------------- P4: adaptive resume bit-identity
+
+
+def check_adaptive_bit_identical(method, sched_name, m0=4, hops=2):
+    """Two halves of the §7/§8 resumability contract, per method × family:
+
+    (i)  state-resume bit-identity: accumulating hop-by-hop through the
+         method's IGState (state_scale=0.5 per nested doubling) EQUALS one
+         fixed run over the final refined schedule — array_equal, not
+         allclose (exact pow-2 weight halving + aligned chunk boundaries);
+    (ii) ``attribute_adaptive`` at tol=0 rides the full ladder and lands on
+         that same fixed result (through its AOT-compiled rungs, where
+         eager-vs-compiled fusion may legitimately differ by ulps — so this
+         half is allclose at float32 tightness, not bit equality).
+    """
+
+    def f(xs, t):
+        return jnp.tanh((xs**2).sum(-1) / 10.0)
+
+    x = jax.random.normal(KEY, (3, 8)) + 1.0
+    bl = jnp.zeros_like(x)
+    t = jnp.zeros((3,), jnp.int32)
+    ex = _explainer(f, method, sched_name, m=m0, n_int=2)
+    chunk = ex.adaptive_chunk
+    fam = schedule.family(sched_name)
+    spec = ex.spec
+
+    # the ladder and the fixed run ride the same deterministic expansion
+    x2, b2, t2, _, n = ex.expand_inputs(x, bl, t, None)
+    sched_ = ex.build_schedule(x2, b2, t2)
+    a = jnp.broadcast_to(sched_.alphas, (x2.shape[0], sched_.alphas.shape[-1]))
+    sched_ = Schedule(a, jnp.broadcast_to(sched_.weights, a.shape))
+
+    # (i) eager hop-by-hop resume vs eager fixed run: bit-identical
+    res_l, state = ig.attribute(
+        f, x2, b2, sched_, t2, method=spec, chunk=chunk, return_state=True
+    )
+    full = sched_
+    for h in range(hops):
+        refined = fam.refine(full)
+        n_old = full.alphas.shape[-1]
+        new_nodes = Schedule(
+            refined.alphas[:, n_old:], refined.weights[:, n_old:]
+        )
+        res_l, state = ig.attribute(
+            f, x2, b2, new_nodes, t2, method=spec, chunk=chunk,
+            state=state, state_scale=0.5, return_state=True,
+        )
+        full = refined
+    fixed = ig.attribute(f, x2, b2, full, t2, method=spec, chunk=chunk)
+    np.testing.assert_array_equal(
+        np.asarray(res_l.attributions), np.asarray(fixed.attributions)
+    )
+
+    # (ii) the compiled adaptive ladder lands on the same result
+    res, info = ex.attribute_adaptive(x, bl, t, tol=0.0, m_max=m0 * 2**hops)
+    assert set(info["m_used"]) == {m0 * 2**hops}
+    fixed_red = ex.reduce_result(fixed, n)
+    np.testing.assert_allclose(
+        np.asarray(res.attributions),
+        np.asarray(fixed_red.attributions),
+        rtol=1e-5,
+        atol=1e-6,
+    )
+
+
+@pytest.mark.parametrize("method,sched_name", GRID)
+def test_adaptive_bit_identical_grid(method, sched_name):
+    check_adaptive_bit_identical(method, sched_name)
+
+
+# ---------------------------------------------------- hypothesis wrappers
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        method=st.sampled_from(ALL_METHODS),
+        sched_name=st.sampled_from(ALL_SCHEDULES),
+        dim=st.integers(2, 16),
+        batch=st.integers(1, 4),
+        seed=st.integers(0, 2**16),
+    )
+    def test_linear_exact_hypothesis(method, sched_name, dim, batch, seed):
+        k = jax.random.PRNGKey(seed)
+        a = jax.random.normal(k, (dim,))
+        x = jax.random.normal(jax.random.fold_in(k, 1), (batch, dim))
+        check_linear_exact(method, sched_name, a, x)
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        m=st.integers(1, 32),
+        batch=st.integers(0, 3),
+        seed=st.integers(0, 2**16),
+        sort=st.booleans(),
+    )
+    def test_refine_invariants_hypothesis(m, batch, seed, sort):
+        rng = np.random.default_rng(seed)
+        shape = (batch, m) if batch else (m,)
+        alphas = rng.uniform(0.0, 1.0, size=shape).astype(np.float32)
+        if sort:
+            alphas = np.sort(alphas, axis=-1)
+        w = rng.uniform(0.1, 1.0, size=shape).astype(np.float32)
+        weights = w / w.sum(-1, keepdims=True)
+        check_refine_invariants(alphas, weights)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        method=st.sampled_from(ALL_METHODS),
+        sched_name=st.sampled_from(ALL_SCHEDULES),
+    )
+    def test_adaptive_bit_identical_hypothesis(method, sched_name):
+        check_adaptive_bit_identical(method, sched_name, m0=2, hops=1)

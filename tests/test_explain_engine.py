@@ -1,12 +1,16 @@
 """ExplainEngine: bucketing/masking correctness + compiled-executable cache.
 
-The three guarantees the serving refactor rests on:
+The guarantees the serving refactor rests on:
   (a) mixed-length batches produce attributions identical to per-length
       unbatched calls — the padding mask changes nothing observable;
   (b) traffic at an already-seen bucket shape performs zero new compilations
       (counted by the engine's jit-wrapper compile counter);
   (c) every registry schedule keeps Σw == 1 and the completeness δ under
-      masking, with exactly zero attribution at masked positions.
+      masking, with exactly zero attribution at masked positions;
+  (d) every attribution method in the MethodSpec registry serves through the
+      engine — fixed-m AND adaptive — with zero steady-state recompiles
+      (replayed traffic is pure cache hits), and the per-row compiled unit
+      matches the core Explainer on the same embeddings.
 """
 import jax
 import jax.numpy as jnp
@@ -17,6 +21,7 @@ from repro.configs import ARCHS, reduced
 from repro.core import schedule
 from repro.core.api import Explainer
 from repro.core.baselines import pad_embedding
+from repro.core.methods import METHODS
 from repro.models.registry import Model
 from repro.serve import ExplainEngine, ExplainRequest
 from repro.serve.batching import bucket_for, plan_buckets, pow2_ladder
@@ -45,7 +50,7 @@ def _requests(cfg, lens, seed=0):
 
 
 def _engine(cfg, params, **kw):
-    kw.setdefault("method", "paper")
+    kw.setdefault("schedule", "paper")
     kw.setdefault("m", 8)
     kw.setdefault("n_int", 4)
     return ExplainEngine(cfg, params, **kw)
@@ -68,7 +73,7 @@ def test_mixed_length_matches_unbatched(lm):
         # exact-length jitted reference: no padding, no mask, fixed pos=-1
         e = model.embed_inputs(params, {"tokens": jnp.asarray(r.tokens)[None]})
         bl = pad_embedding(params["embed"]["embedding"], e, pad_id=0)
-        ex = Explainer(f, method="paper", m=8, n_int=4)
+        ex = Explainer(f, schedule="paper", m=8, n_int=4)
         ref = jax.jit(ex.attribute)(e, bl, jnp.asarray([r.target]))
         np.testing.assert_allclose(
             mixed[i]["token_scores"],
@@ -119,7 +124,7 @@ def test_registry_schedule_masked_invariants(name):
     bl = jnp.zeros_like(x)
     t = jnp.zeros((3,), jnp.int32)
     mask = jnp.asarray(np.tril(np.ones((3, 8), np.float32), k=4))  # ragged tail
-    ex = Explainer(quad_f, method=name, m=16, n_int=4)
+    ex = Explainer(quad_f, schedule=name, m=16, n_int=4)
     sched = ex.build_schedule(x, bl, t, mask)
     np.testing.assert_allclose(np.asarray(sched.weights.sum(-1)), 1.0, rtol=1e-4)
     res = ex.attribute(x, bl, t, mask)
@@ -130,6 +135,76 @@ def test_registry_schedule_masked_invariants(name):
     masked_x = jnp.where(mask.astype(bool), x, bl)
     gap = np.abs(attr.sum(-1) - np.asarray(quad_f(masked_x, t) - quad_f(bl, t)))
     np.testing.assert_allclose(gap, np.asarray(res.delta), atol=1e-5)
+
+
+# --------------------------------- (d) method zoo through the serving engine
+
+
+@pytest.mark.parametrize("method", sorted(METHODS))
+def test_method_zoo_zero_steady_state_recompiles(lm, method):
+    """Acceptance gate: every registered method serves mixed-length traffic
+    through the engine, and replaying fresh same-shape traffic touches only
+    warmed executables (ensemble methods included — their noise is a pure
+    function of the request indices, so the escalation path replays too)."""
+    cfg, _, params = lm
+    eng = _engine(cfg, params, method=method, n_samples=2)
+    out = eng.explain(_requests(cfg, MIXED_LENS, seed=11))
+    misses = eng.stats.misses
+    assert misses > 0
+    out2 = eng.explain(_requests(cfg, MIXED_LENS, seed=12))
+    assert eng.stats.misses == misses, f"{method} recompiled at steady state"
+    for o in out + out2:
+        assert np.isfinite(o["token_scores"]).all()
+        assert np.isfinite(o["delta"]) and np.isfinite(o["f_x"])
+    for o, r in zip(out, _requests(cfg, MIXED_LENS, seed=11)):
+        assert o["token_scores"].shape == (len(r.tokens),)
+
+
+@pytest.mark.parametrize("method", sorted(METHODS))
+def test_method_zoo_adaptive_zero_recompiles_on_replay(lm, method):
+    cfg, _, params = lm
+    reqs = _requests(cfg, (9, 17, 12, 24), seed=13)
+    eng = _engine(
+        cfg, params, method=method, m=4, adaptive=True, tol=1e-2, m_max=16,
+        n_samples=2,
+    )
+    out = eng.explain(reqs)
+    misses = eng.stats.misses
+    out2 = eng.explain(reqs)
+    assert eng.stats.misses == misses, f"{method} adaptive replay recompiled"
+    for o, o2 in zip(out, out2):
+        assert o["m_used"] in eng.m_ladder and o["hops"] >= 0
+        np.testing.assert_array_equal(o["token_scores"], o2["token_scores"])
+
+
+def test_engine_idgi_matches_core_explainer(lm):
+    """The engine's compiled IDGI unit == the core Explainer on the same
+    embeddings (the serving stack adds batching/masking, not math)."""
+    cfg, model, params = lm
+    (req,) = _requests(cfg, (9,), seed=14)
+    out = _engine(cfg, params, method="idgi").explain([req])[0]
+    f = model.target_logprob_fn(params)
+    e = model.embed_inputs(params, {"tokens": jnp.asarray(req.tokens)[None]})
+    bl = pad_embedding(params["embed"]["embedding"], e, pad_id=0)
+    ex = Explainer(f, method="idgi", schedule="paper", m=8, n_int=4)
+    ref = jax.jit(ex.attribute)(e, bl, jnp.asarray([req.target]))
+    np.testing.assert_allclose(
+        out["token_scores"], np.asarray(ref.attributions.sum(-1))[0], atol=1e-4
+    )
+    np.testing.assert_allclose(out["delta"], float(ref.delta[0]), atol=1e-4)
+
+
+def test_ensemble_engine_result_is_sample_mean(lm):
+    """n_samples=1 with sigma→0 degrades noise_tunnel to plain IG — the
+    reduction plumbing must be exact in that corner."""
+    cfg, _, params = lm
+    reqs = _requests(cfg, MIXED_LENS, seed=15)
+    nt = _engine(cfg, params, method="noise_tunnel", n_samples=1, sigma=1e-9)
+    base = _engine(cfg, params, method="ig")
+    out_nt = nt.explain(reqs)
+    out_ig = base.explain(reqs)
+    for a, b in zip(out_nt, out_ig):
+        np.testing.assert_allclose(a["token_scores"], b["token_scores"], atol=1e-4)
 
 
 # ----------------------------------------------------------- bucket planning

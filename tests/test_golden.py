@@ -1,0 +1,59 @@
+"""Golden regression: per-method paper-CNN attributions vs checked-in
+fixtures (tests/golden/cnn_<method>.npz, produced by tools/make_golden.py).
+
+Engine / schedule / serving refactors are free to reorganize HOW the numbers
+are computed — these tests pin WHAT comes out. Tolerance bands absorb
+benign fusion/reduction-order drift (rtol 1e-3 against values ~1e-3..1e-1,
+plus a small atol floor for near-zero pixels); anything beyond that is a
+behavior change and must regenerate the fixtures deliberately.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.methods import METHODS
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+
+# generation-config mirror of tools/make_golden.py (kept in the tool)
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tools"))
+from make_golden import golden_explainer, golden_inputs  # noqa: E402
+
+RTOL = 1e-3
+ATOL = 1e-5
+
+
+@pytest.fixture(scope="module")
+def pipeline():
+    return golden_inputs()
+
+
+@pytest.mark.parametrize("method", sorted(METHODS))
+def test_golden_attributions(method, pipeline):
+    path = os.path.join(GOLDEN_DIR, f"cnn_{method}.npz")
+    assert os.path.exists(path), (
+        f"missing golden fixture {path} — run PYTHONPATH=src python "
+        "tools/make_golden.py and commit the result"
+    )
+    want = np.load(path)
+    f, x, bl, t = pipeline
+    res = golden_explainer(f, method).attribute(x, bl, t)
+    got = np.asarray(res.attributions, np.float32)
+    assert got.shape == want["attributions"].shape
+    atol = ATOL + RTOL * float(np.abs(want["attributions"]).max())
+    np.testing.assert_allclose(
+        got, want["attributions"], rtol=RTOL, atol=atol,
+        err_msg=f"{method} attributions drifted beyond the golden band",
+    )
+    np.testing.assert_allclose(
+        np.asarray(res.f_x, np.float32), want["f_x"], rtol=1e-4, atol=1e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(res.f_baseline, np.float32), want["f_baseline"], rtol=1e-4, atol=1e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(res.delta, np.float32), want["delta"], rtol=1e-2, atol=1e-4
+    )

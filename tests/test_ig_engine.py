@@ -102,15 +102,15 @@ def test_per_example_schedules():
     assert float(res.delta.max()) < 0.05
 
 
-@pytest.mark.parametrize("method", ["uniform", "paper", "warp", "gauss", "refine"])
-def test_explainer_end_to_end(method):
+@pytest.mark.parametrize("schedule_name", ["uniform", "paper", "warp", "gauss", "refine"])
+def test_explainer_end_to_end(schedule_name):
     def f(xs, t):
         return jnp.tanh((xs**2).sum(-1) / 10.0)
 
     x = jax.random.normal(KEY, (4, 16))
     bl = jnp.zeros_like(x)
     t = jnp.zeros((4,), jnp.int32)
-    ex = Explainer(f, method=method, m=32, n_int=4)
+    ex = Explainer(f, schedule=schedule_name, m=32, n_int=4)
     res = ex.attribute(x, bl, t)
     assert res.attributions.shape == x.shape
     assert not bool(jnp.any(jnp.isnan(res.attributions)))
@@ -121,7 +121,7 @@ def test_explainer_jit_compiles_once():
     def f(xs, t):
         return jnp.sum(xs**2, axis=-1)
 
-    ex = Explainer(f, method="paper", m=16, n_int=4)
+    ex = Explainer(f, schedule="paper", m=16, n_int=4)
     jitted = ex.jitted()
     x = jax.random.normal(KEY, (2, 8))
     r1 = jitted(x, jnp.zeros_like(x), jnp.zeros((2,), jnp.int32))
@@ -156,7 +156,7 @@ def test_noise_tunnel_and_multibaseline_compose():
 
     x = jax.random.normal(KEY, (2, 6))
     t = jnp.zeros((2,), jnp.int32)
-    ex = Explainer(f, method="paper", m=16, n_int=4)
+    ex = Explainer(f, schedule="paper", m=16, n_int=4)
     nt = smooth.noise_tunnel(
         lambda xn: ex.attribute(xn, jnp.zeros_like(xn), t), x, KEY, n_samples=2
     )

@@ -3,6 +3,8 @@
 All kernels run in interpret=True (Pallas kernel body executed in Python on
 CPU) — the BlockSpec tiling/grid logic is exactly what a TPU would execute.
 """
+import contextlib
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -12,12 +14,38 @@ from repro.core import ig, schedule
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
-from repro.kernels.ig_accum.ops import ig_accum
-from repro.kernels.ig_accum.ref import ig_accum_ref
+from repro.kernels.ig_accum.ops import accum_fn_for, ig_accum, ig_accum_idgi
+from repro.kernels.ig_accum.ref import ig_accum_idgi_ref, ig_accum_ref
 from repro.kernels.interpolate.ops import interpolate as interpolate_k
 from repro.kernels.interpolate.ref import interpolate_ref
 
 KEY = jax.random.PRNGKey(0)
+
+# Parity must hold on UNFRIENDLY shapes — odd, prime, non-pow2 K and F that
+# exercise the pad-to-block paths — and under the numerics the deploy targets
+# actually use: f32, bf16 (TPU compute dtype), and f64 (x64-enabled hosts).
+ODD_SHAPES = [(1, 3, 17), (2, 7, 33), (3, 5, 130), (2, 9, 257)]
+DTYPES = [jnp.float32, jnp.bfloat16, jnp.float64]
+
+
+def _dtype_ctx(dtype):
+    """x64 must be enabled around f64 parity cases (and only those)."""
+    if dtype == jnp.float64:
+        return jax.experimental.enable_x64()
+    return contextlib.nullcontext()
+
+
+def _tol(dtype):
+    return {jnp.float32: 1e-5, jnp.float64: 1e-5, jnp.bfloat16: 3e-2}[dtype]
+
+
+def _ragged_mask(B, F):
+    """Ragged real-position mask: row b keeps a different odd prefix."""
+    lens = [max(1, (F * (b + 1)) // (B + 1) - b) for b in range(B)]
+    m = np.zeros((B, F), np.float32)
+    for b, n in enumerate(lens):
+        m[b, :n] = 1.0
+    return jnp.asarray(m)
 
 
 # ------------------------------------------------------------- interpolate
@@ -80,15 +108,123 @@ def test_kernels_inside_engine():
     sched = schedule.uniform(8)
     base = ig.attribute(f, x, bl, sched, t)
 
-    def accum_fn(acc, grads, weights):
-        return ig_accum(acc, grads, weights)
-
+    # the ops wrappers honor the MethodSpec accumulator signature directly
     fused = ig.attribute(
-        f, x, bl, sched, t, interp_fn=interpolate_k, accum_fn=accum_fn
+        f, x, bl, sched, t, interp_fn=interpolate_k, accum_fn=ig_accum
     )
     np.testing.assert_allclose(
         np.asarray(base.attributions), np.asarray(fused.attributions), rtol=1e-4, atol=1e-5
     )
+
+
+# ------------------------------------- odd shapes × masks × {f32, bf16, f64}
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("B,K,F", ODD_SHAPES)
+def test_interpolate_odd_shapes_masked(B, K, F, dtype):
+    with _dtype_ctx(dtype):
+        x = jax.random.normal(KEY, (B, F)).astype(dtype)
+        b = (0.1 * jax.random.normal(jax.random.fold_in(KEY, 1), (B, F))).astype(dtype)
+        a = jax.random.uniform(jax.random.fold_in(KEY, 2), (B, K))
+        mask = _ragged_mask(B, F)
+        got = interpolate_k(x, b, a, mask=mask)
+        pinned = jnp.where(mask.astype(bool), x, b)
+        want = interpolate_ref(pinned, b, a)
+        tol = _tol(dtype)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            rtol=tol, atol=tol,
+        )
+        # masked positions sit EXACTLY at the baseline for every alpha
+        off = np.asarray(mask) == 0.0
+        np.testing.assert_array_equal(
+            np.asarray(got, np.float32)[:, :, :][np.broadcast_to(off[:, None, :], got.shape)],
+            np.broadcast_to(np.asarray(b, np.float32)[:, None, :], got.shape)[
+                np.broadcast_to(off[:, None, :], got.shape)
+            ],
+        )
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("B,K,F", ODD_SHAPES)
+def test_ig_accum_odd_shapes_masked(B, K, F, dtype):
+    with _dtype_ctx(dtype):
+        g = jax.random.normal(KEY, (B, K, F)).astype(dtype)
+        w = jax.random.uniform(jax.random.fold_in(KEY, 1), (B, K))
+        acc = jax.random.normal(jax.random.fold_in(KEY, 2), (B, F)).astype(jnp.float32)
+        mask = _ragged_mask(B, F)
+        got = ig_accum(acc, g, w, mask=mask)
+        want = ig_accum_ref(acc, g * mask[:, None, :].astype(g.dtype), w)
+        tol = _tol(dtype)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=tol, atol=tol
+        )
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("B,K,F", ODD_SHAPES)
+def test_ig_accum_idgi_odd_shapes_masked(B, K, F, dtype):
+    """The IDGI weighting pass: two-pass Pallas vs the einsum oracle, on
+    pad-exercising shapes, with ragged masks, under each deploy dtype."""
+    with _dtype_ctx(dtype):
+        g = jax.random.normal(KEY, (B, K, F)).astype(dtype)
+        w = jax.random.uniform(jax.random.fold_in(KEY, 1), (B, K))
+        acc = jax.random.normal(jax.random.fold_in(KEY, 2), (B, F)).astype(jnp.float32)
+        d = jax.random.normal(jax.random.fold_in(KEY, 3), (B, F)).astype(dtype)
+        mask = _ragged_mask(B, F)
+        mg = mask[:, None, :].astype(g.dtype)
+        got = ig_accum_idgi(acc, g, w, diff=d, mask=mask)
+        want = ig_accum_idgi_ref(acc, g * mg, w, d)
+        tol = _tol(dtype)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=tol, atol=tol
+        )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ig_accum_idgi_friendly_shapes(dtype):
+    B, K, F = 2, 8, 512  # no padding: the pure-kernel path
+    g = jax.random.normal(KEY, (B, K, F)).astype(dtype)
+    w = jax.random.uniform(jax.random.fold_in(KEY, 1), (B, K))
+    acc = jnp.zeros((B, F), jnp.float32)
+    d = jax.random.normal(jax.random.fold_in(KEY, 3), (B, F)).astype(dtype)
+    got = ig_accum_idgi(acc, g, w, diff=d)
+    want = ig_accum_idgi_ref(acc, g, w, d)
+    tol = _tol(dtype)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol)
+
+
+def test_ig_accum_idgi_zero_gradient_rows():
+    """⟨g, g⟩ == 0 steps contribute exactly zero, never NaN."""
+    g = jnp.zeros((1, 4, 16))
+    out = ig_accum_idgi(
+        jnp.zeros((1, 16)), g, jnp.ones((1, 4)), diff=jnp.ones((1, 16))
+    )
+    assert bool(jnp.isfinite(out).all()) and float(jnp.abs(out).sum()) == 0.0
+
+
+def test_idgi_kernel_inside_engine():
+    """Pallas IDGI kernels injected into the IG engine == the jnp method."""
+
+    def f(xs, t):
+        return jnp.tanh((xs**2).sum(-1) / 10.0)
+
+    x = jax.random.normal(KEY, (2, 64)) + 1.0
+    bl = jnp.zeros_like(x)
+    t = jnp.zeros((2,), jnp.int32)
+    sched = schedule.uniform(8)
+    base = ig.attribute(f, x, bl, sched, t, method="idgi")
+    fused = ig.attribute(
+        f, x, bl, sched, t, method="idgi",
+        interp_fn=interpolate_k, accum_fn=accum_fn_for("idgi"),
+    )
+    np.testing.assert_allclose(
+        np.asarray(base.attributions), np.asarray(fused.attributions),
+        rtol=1e-4, atol=1e-6,
+    )
+    with pytest.raises(ValueError, match="riemann"):
+        accum_fn_for("simpson")
 
 
 # --------------------------------------------------------- flash attention

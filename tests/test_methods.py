@@ -1,0 +1,204 @@
+"""Attribution-method zoo: MethodSpec registry semantics + per-method math.
+
+The anchors:
+  (a) IDGI through the engine matches a HAND-WRITTEN per-step reference loop
+      (independent implementation: explicit python loop, one jax.grad per
+      step, no scan/chunk/registry machinery) on the paper CNN;
+  (b) total IDGI attribution == total IG attribution for the same schedule
+      (both are the same directional-derivative quadrature), so IDGI inherits
+      IG's δ and with it the δ-adaptive serving machinery;
+  (c) the path-ensemble methods equal a hand-rolled mean over the same
+      deterministic samples;
+  (d) registries (methods + baselines) fail loudly with valid names listed.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_cnn import CONFIG as CNN_CONFIG
+from repro.core import baselines, ig, methods, schedule, smooth
+from repro.core.api import Explainer
+from repro.models import cnn
+
+KEY = jax.random.PRNGKey(0)
+
+
+def quad_f(xs, t):
+    return jnp.sum(xs**2, axis=-1)
+
+
+# --------------------------------------------------------------- (a) IDGI ref
+
+
+def idgi_hand_reference(f, x, baseline, sched, target):
+    """Straight-line IDGI, written the way the formula reads: for each node
+    α_k (python loop, no scan/chunks), g_k = ∇f(x(α_k)), the node's tangent
+    f-difference d_k = ⟨g_k, x − x′⟩ w_k is split over features ∝ g_k²."""
+    B = x.shape[0]
+    alphas = np.asarray(jnp.broadcast_to(sched.alphas, (B, sched.alphas.shape[-1])))
+    weights = np.asarray(jnp.broadcast_to(sched.weights, alphas.shape))
+    diff = np.asarray(x - baseline, np.float32).reshape(B, -1)
+    attr = np.zeros((B, diff.shape[1]), np.float32)
+    grad_f = jax.grad(lambda xs, t: f(xs, t).sum())
+    for k in range(alphas.shape[1]):
+        a = jnp.asarray(alphas[:, k]).reshape((B,) + (1,) * (x.ndim - 1))
+        xi = baseline + a.astype(x.dtype) * (x - baseline)
+        g = np.asarray(grad_f(xi, target), np.float32).reshape(B, -1)
+        s = (g * g).sum(-1)  # ⟨g, g⟩
+        p = (g * diff).sum(-1)  # ⟨g, x − x′⟩
+        for b in range(B):
+            if s[b] > 0.0:
+                attr[b] += (weights[b, k] * p[b] / s[b]) * (g[b] * g[b])
+    return attr.reshape(x.shape)
+
+
+def test_idgi_matches_hand_reference_on_paper_cnn():
+    params = cnn.init(CNN_CONFIG, KEY)
+    f = lambda xs, t: cnn.prob_fn(CNN_CONFIG, params, xs, t)
+    s = CNN_CONFIG.image_size
+    x = jax.random.uniform(jax.random.fold_in(KEY, 1), (2, s, s, CNN_CONFIG.channels))
+    bl = jnp.zeros_like(x)
+    t = jnp.asarray([1, 2], jnp.int32)
+    ex = Explainer(f, method="idgi", schedule="paper", m=8, n_int=4)
+    sched = ex.build_schedule(x, bl, t)
+    res = ex.attribute(x, bl, t)
+    want = idgi_hand_reference(f, x, bl, sched, t)
+    np.testing.assert_allclose(
+        np.asarray(res.attributions), want, rtol=1e-4, atol=1e-6
+    )
+
+
+def test_idgi_matches_hand_reference_chunked():
+    """Chunked scan == the per-step loop (chunking is invisible to IDGI)."""
+    x = jax.random.normal(KEY, (3, 8)) + 1.0
+    bl = jnp.zeros_like(x)
+    t = jnp.zeros((3,), jnp.int32)
+
+    def f(xs, t):
+        return jnp.tanh((xs**2).sum(-1) / 10.0)
+
+    sched = schedule.uniform(16)
+    res = ig.attribute(f, x, bl, sched, t, method="idgi", chunk=4)
+    want = idgi_hand_reference(f, x, bl, sched, t)
+    np.testing.assert_allclose(np.asarray(res.attributions), want, rtol=1e-5, atol=1e-7)
+
+
+# ------------------------------------------- (b) IDGI totals == IG totals
+
+
+def test_idgi_total_equals_ig_total():
+    """Σ_j φ_idgi == Σ_j φ_ig for any schedule (both equal the quadrature
+    Σ_k w_k ⟨g_k, x − x′⟩) — hence identical δ, hence identical δ-adaptive
+    behavior. The per-feature DISTRIBUTION differs (that's the point)."""
+    x = jax.random.normal(KEY, (4, 12)) + 1.0
+    bl = 0.1 * jnp.ones_like(x)
+    t = jnp.zeros((4,), jnp.int32)
+
+    def f(xs, t):
+        return jnp.tanh((xs**3).sum(-1) / 30.0)
+
+    for name in ("uniform", "paper"):
+        ex_ig = Explainer(f, method="ig", schedule=name, m=16, n_int=4)
+        ex_id = Explainer(f, method="idgi", schedule=name, m=16, n_int=4)
+        r_ig = ex_ig.attribute(x, bl, t)
+        r_id = ex_id.attribute(x, bl, t)
+        np.testing.assert_allclose(
+            np.asarray(r_id.attributions.sum((-1,))),
+            np.asarray(r_ig.attributions.sum((-1,))),
+            rtol=1e-5,
+            atol=1e-6,
+        )
+        np.testing.assert_allclose(
+            np.asarray(r_id.delta), np.asarray(r_ig.delta), rtol=1e-4, atol=1e-6
+        )
+        assert not np.allclose(
+            np.asarray(r_id.attributions), np.asarray(r_ig.attributions)
+        ), "IDGI must redistribute attribution, not reproduce IG"
+
+
+# ------------------------------------------------ (c) ensemble equivalences
+
+
+def test_noise_tunnel_equals_manual_sample_mean():
+    x = jax.random.normal(KEY, (2, 6)) + 1.0
+    bl = jnp.zeros_like(x)
+    t = jnp.zeros((2,), jnp.int32)
+    ex = Explainer(
+        quad_f, method="noise_tunnel", schedule="uniform", m=8,
+        n_samples=3, sigma=0.2, sample_seed=7,
+    )
+    res = ex.attribute(x, bl, t)
+    # hand-rolled: same deterministic samples (smooth.noise_samples with the
+    # explainer's key), one vanilla IG per row, mean per example
+    xs = smooth.noise_samples(x, jax.random.PRNGKey(7), 3, 0.2)
+    per_row = ig.attribute(
+        quad_f, xs, jnp.repeat(bl, 3, axis=0), schedule.uniform(8),
+        jnp.repeat(t, 3, axis=0),
+    )
+    want = np.asarray(per_row.attributions).reshape(2, 3, -1).mean(1)
+    np.testing.assert_allclose(
+        np.asarray(res.attributions), want.reshape(res.attributions.shape),
+        rtol=1e-5, atol=1e-6,
+    )
+
+
+def test_expected_grad_equals_manual_baseline_mean():
+    x = jax.random.normal(KEY, (2, 6)) + 1.0
+    bl = jnp.zeros_like(x)
+    t = jnp.zeros((2,), jnp.int32)
+    ex = Explainer(
+        quad_f, method="expected_grad", schedule="uniform", m=8,
+        n_samples=3, sigma=0.3, sample_seed=11,
+    )
+    res = ex.attribute(x, bl, t)
+    x2, b2 = methods.baseline_expand(x, bl, jax.random.PRNGKey(11), 3, 0.3)
+    per_row = ig.attribute(
+        quad_f, x2, b2, schedule.uniform(8), jnp.repeat(t, 3, axis=0)
+    )
+    want = np.asarray(per_row.attributions).reshape(2, 3, -1).mean(1)
+    np.testing.assert_allclose(
+        np.asarray(res.attributions), want.reshape(res.attributions.shape),
+        rtol=1e-5, atol=1e-6,
+    )
+
+
+def test_ensemble_is_deterministic():
+    x = jax.random.normal(KEY, (2, 6))
+    bl = jnp.zeros_like(x)
+    t = jnp.zeros((2,), jnp.int32)
+    ex = Explainer(quad_f, method="noise_tunnel", schedule="uniform", m=8)
+    r1, r2 = ex.attribute(x, bl, t), ex.attribute(x, bl, t)
+    np.testing.assert_array_equal(
+        np.asarray(r1.attributions), np.asarray(r2.attributions)
+    )
+
+
+# ---------------------------------------------------------- (d) registries
+
+
+def test_methods_registry_errors():
+    with pytest.raises(ValueError, match="expected_grad"):
+        methods.get("nope")
+    for name, spec in methods.METHODS.items():
+        assert methods.get(name) is spec
+        assert spec.accum in ("riemann", "idgi")
+        # row_spec strips expansion (the serving engine's compiled unit)
+        assert spec.row_spec().expand is None
+        assert spec.row_spec().accum == spec.accum
+
+
+def test_baselines_registry_covers_all_and_errors(rng, key):
+    # every defined baseline is reachable by name (gaussian/pad_embedding
+    # were historically missing from the registry)
+    assert set(baselines.BASELINES) == {"black", "white", "gaussian", "pad_embedding"}
+    x = jnp.asarray(rng.normal(size=(2, 4)).astype(np.float32))
+    assert baselines.get("black")(x).sum() == 0.0
+    assert float(baselines.get("white")(x).mean()) == 1.0
+    g = baselines.get("gaussian")(x, key, sigma=0.5)
+    assert g.shape == x.shape and bool(jnp.isfinite(g).all())
+    table = jnp.asarray(rng.normal(size=(7, 4)).astype(np.float32))
+    pe = baselines.get("pad_embedding")(table, x, pad_id=3)
+    np.testing.assert_array_equal(np.asarray(pe[0]), np.asarray(table[3]))
+    with pytest.raises(ValueError, match="valid baselines.*black"):
+        baselines.get("transparent")

@@ -49,8 +49,8 @@ def test_explain_service_paper_vs_uniform():
         ExplainRequest(tokens=rng.integers(0, cfg.vocab_size, 12).astype(np.int32), target=5)
         for _ in range(3)
     ]
-    out_p = ExplainService(cfg, params, method="paper", m=16, n_int=4).explain(reqs)
-    out_u = ExplainService(cfg, params, method="uniform", m=16).explain(reqs)
+    out_p = ExplainService(cfg, params, schedule="paper", m=16, n_int=4).explain(reqs)
+    out_u = ExplainService(cfg, params, schedule="uniform", m=16).explain(reqs)
     for o in out_p + out_u:
         assert o["token_scores"].shape == (12,)
         assert np.isfinite(o["token_scores"]).all()
@@ -70,5 +70,5 @@ def test_explain_service_other_families(arch):
     params = model.init(KEY)
     rng = np.random.default_rng(1)
     reqs = [ExplainRequest(tokens=rng.integers(0, cfg.vocab_size, 8).astype(np.int32), target=3)]
-    out = ExplainService(cfg, params, method="paper", m=8, n_int=4).explain(reqs)
+    out = ExplainService(cfg, params, schedule="paper", m=8, n_int=4).explain(reqs)
     assert np.isfinite(out[0]["token_scores"]).all()

@@ -1,0 +1,84 @@
+"""Regenerate the golden attribution fixtures under tests/golden/.
+
+    PYTHONPATH=src python tools/make_golden.py
+
+One .npz per registered attribution method, produced on the paper CNN
+(random-init from a fixed seed — no trained checkpoint dependency) with a
+fixed input batch and the paper schedule. ``tests/test_golden.py`` replays
+the identical pipeline and compares within tolerance bands, so engine /
+schedule / serving refactors cannot silently change what users see.
+
+Regenerate ONLY when an intentional output-changing change lands, and say so
+in the commit message — a diff here is the test's entire point.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_cnn import CONFIG as CNN_CONFIG
+from repro.core.api import Explainer
+from repro.core.methods import METHODS
+from repro.models import cnn
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "..", "tests", "golden")
+
+# Frozen generation config — test_golden.py mirrors these exactly.
+SEED = 0
+BATCH = 2
+M = 16
+N_INT = 4
+SCHEDULE = "paper"
+N_SAMPLES = 2
+SIGMA = 0.05
+TARGETS = (1, 2)
+
+
+def golden_inputs():
+    params = cnn.init(CNN_CONFIG, jax.random.PRNGKey(SEED))
+    s = CNN_CONFIG.image_size
+    x = jax.random.uniform(
+        jax.random.PRNGKey(SEED + 1), (BATCH, s, s, CNN_CONFIG.channels)
+    )
+    t = jnp.asarray(TARGETS, jnp.int32)
+    f = lambda xs, tt: cnn.prob_fn(CNN_CONFIG, params, xs, tt)
+    return f, x, jnp.zeros_like(x), t
+
+
+def golden_explainer(f, method: str) -> Explainer:
+    return Explainer(
+        f,
+        method=method,
+        schedule=SCHEDULE,
+        m=M,
+        n_int=N_INT,
+        n_samples=N_SAMPLES,
+        sigma=SIGMA,
+        sample_seed=SEED,
+    )
+
+
+def main() -> int:
+    os.makedirs(GOLDEN_DIR, exist_ok=True)
+    f, x, bl, t = golden_inputs()
+    for method in sorted(METHODS):
+        res = golden_explainer(f, method).attribute(x, bl, t)
+        path = os.path.join(GOLDEN_DIR, f"cnn_{method}.npz")
+        np.savez_compressed(
+            path,
+            attributions=np.asarray(res.attributions, np.float32),
+            f_x=np.asarray(res.f_x, np.float32),
+            f_baseline=np.asarray(res.f_baseline, np.float32),
+            delta=np.asarray(res.delta, np.float32),
+            meta=np.asarray([SEED, BATCH, M, N_INT, N_SAMPLES], np.int64),
+        )
+        print(f"{path}: |attr| mean {np.abs(np.asarray(res.attributions)).mean():.3e} "
+              f"delta {np.asarray(res.delta)}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -71,7 +71,7 @@ def explain_adaptive_bench(args) -> dict:
         for s in rng.integers(9, 33, size=args.requests)
     ]
     eng = ExplainEngine(
-        cfg, params, method=args.method, m=args.base_m, n_int=4,
+        cfg, params, method=args.method, schedule=args.schedule, m=args.base_m, n_int=4,
         adaptive=True, tol=args.tol, m_max=args.m_max,
     )
     eng.explain(reqs)  # warm every ladder executable this traffic touches
@@ -89,6 +89,7 @@ def explain_adaptive_bench(args) -> dict:
         "kind": "explain_adaptive",
         "arch": args.arch,
         "method": args.method,
+        "schedule": args.schedule,
         "tol": args.tol,
         "ladder": list(eng.m_ladder),
         "requests": a.requests - warm[5],
@@ -121,7 +122,8 @@ def main():
     ap.add_argument("shape", nargs="?")
     ap.add_argument("--explain-adaptive", action="store_true",
                     help="measure δ-feedback explain serving instead of a cell")
-    ap.add_argument("--method", default="paper")
+    ap.add_argument("--method", default="ig", help="attribution method (core.methods)")
+    ap.add_argument("--schedule", default="paper", help="schedule family (core.schedule)")
     ap.add_argument("--tol", type=float, default=1e-2)
     ap.add_argument("--base-m", type=int, default=8)
     ap.add_argument("--m-max", type=int, default=64)
