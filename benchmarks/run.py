@@ -57,7 +57,26 @@ def main() -> int:
         action="store_true",
         help="method-zoo AUC/latency bench only -> results/BENCH_quality.json",
     )
+    ap.add_argument(
+        "--mesh",
+        default="",
+        metavar="DP,TP",
+        help="mesh scaling sweep only (e.g. 2,1) -> results/BENCH_mesh.json; "
+        "forces DP*TP virtual host devices if fewer exist",
+    )
     args = ap.parse_args()
+
+    if args.mesh:
+        # must win the race with JAX backend init (benchmarks only import
+        # jax at module load; nothing has touched a device yet)
+        from repro.launch.mesh import ensure_host_devices, parse_mesh_arg
+
+        dp, tp = parse_mesh_arg(args.mesh)
+        ensure_host_devices(dp * tp)
+        out = latency.mesh_run(args.mesh, requests=8, rounds=3)
+        path = _write("BENCH_mesh.json", out)
+        print(f"# mesh bench -> {path}")
+        return 0 if out["pass"] else 1
 
     if args.adaptive or args.smoke:
         out = convergence.adaptive_run(

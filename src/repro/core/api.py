@@ -15,6 +15,22 @@ Every method rides every schedule; path-ensemble methods (noise_tunnel,
 expected_grad) expand each example to ``n_samples`` contiguous rows before
 stage 1 and reduce (mean over samples) after stage 2, so the compiled
 pipeline only ever sees plain per-row attribution problems.
+
+A quick end-to-end example (the quadratic has a linear path integrand, so
+the midpoint rule is exact and the completeness gap δ is ~0):
+
+    >>> import jax.numpy as jnp
+    >>> f = lambda xs, targets: jnp.sum(xs ** 2, axis=-1)
+    >>> ex = Explainer(f, schedule="uniform", m=8)
+    >>> res = ex.attribute(jnp.ones((2, 3)), jnp.zeros((2, 3)), None)
+    >>> res.attributions.shape
+    (2, 3)
+    >>> bool(res.delta.max() < 1e-4)  # Σφ == f(x) − f(x′) = 3.0
+    True
+
+Under a device mesh (``mesh=``, ``mesh_rules=``), the adaptive AOT
+executables are compiled with ``NamedSharding``s over the leading batch dim
+(DESIGN.md §9); the serving-grade path is ``repro.serve.ExplainEngine``.
 """
 from __future__ import annotations
 
@@ -35,6 +51,29 @@ from repro.core.schedule import Schedule
 
 @dataclass
 class Explainer:
+    """One model function + one (method, schedule) configuration.
+
+    Args:
+        f: ``f(xs, targets) -> (N,)`` differentiable scalar model output.
+        method: attribution method name in ``methods.METHODS`` (or a spec).
+        schedule: schedule family name in ``schedule.SCHEDULES``.
+        m: total interpolation steps (the stage-2 budget).
+        n_int: stage-1 probe intervals (paper sweeps 2..8).
+        chunk: stage-2 step chunk size (0 = all ``m`` at once).
+        mesh / mesh_rules: optional device mesh — the adaptive AOT
+            executables then shard every batch-leading input over the
+            mesh's data axes (DESIGN.md §9).
+
+    Example (paper schedule on a tiny quadratic):
+
+        >>> import jax.numpy as jnp
+        >>> f = lambda xs, t: jnp.sum(xs ** 2, axis=-1)
+        >>> ex = Explainer(f, method="ig", schedule="paper", m=16, n_int=4)
+        >>> res = ex.attribute(2.0 * jnp.ones((1, 4)), jnp.zeros((1, 4)), None)
+        >>> bool(abs(res.attributions.sum() - res.f_x[0]) < 1e-3)
+        True
+    """
+
     f: ScalarFn
     method: Union[str, MethodSpec] = "ig"  # any name in methods.METHODS
     schedule: str = "paper"  # any name in schedule.SCHEDULES
@@ -54,13 +93,21 @@ class Explainer:
     n_samples: int = 0
     sigma: float = 0.0
     sample_seed: int = 0
+    # optional device mesh (DESIGN.md §9): attribute_adaptive's AOT rung
+    # executables compile with NamedShardings over the batch-leading dim of
+    # every input, and the cache key grows the mesh axis sizes so sharded
+    # and single-device entries coexist. None = single-device.
+    mesh: Any = None
+    mesh_rules: Any = None
 
     @property
     def spec(self) -> MethodSpec:
+        """The resolved ``MethodSpec`` for ``self.method``."""
         return methods_mod.get(self.method)
 
     @property
     def ensemble_size(self) -> int:
+        """Sample rows per example (1 for non-ensemble methods)."""
         spec = self.spec
         if spec.expand is None:
             return 1
@@ -68,6 +115,7 @@ class Explainer:
 
     @property
     def ensemble_sigma(self) -> float:
+        """Path-ensemble perturbation scale (method default unless set)."""
         return self.sigma if self.sigma else self.spec.sigma_default
 
     # -- path-ensemble expansion ------------------------------------------
@@ -140,6 +188,19 @@ class Explainer:
         target: Any,
         mask: Optional[jax.Array] = None,
     ) -> IGResult:
+        """Fixed-m attribution: stage-1 probe + stage-2 accumulation.
+
+        Args:
+            x: (B, *F) inputs; baseline: (B, *F) path start x′.
+            target: pytree of per-example arrays passed through to ``f``
+                (``None`` if ``f`` ignores it).
+            mask: optional (B, *L) real-position mask — masked positions
+                interpolate to the baseline and attribute exactly 0.
+
+        Returns:
+            ``IGResult(attributions (B, *F), f_x, f_baseline, delta)`` where
+            ``delta`` is the completeness gap |Σφ − (f_x − f_baseline)|.
+        """
         x2, b2, t2, m2, n = self.expand_inputs(x, baseline, target, mask)
         sched = self.build_schedule(x2, b2, t2, m2)
         res = ig.attribute(
@@ -156,7 +217,9 @@ class Explainer:
         return self.reduce_result(res, n)
 
     def jitted(self) -> Callable:
-        """One compiled end-to-end (stage1 + stage2) explanation step."""
+        """One compiled end-to-end (stage 1 + stage 2) explanation step —
+        the single-program form the paper benchmarks; the serving engine
+        AOT-compiles the same unit per bucket shape instead."""
         return jax.jit(self.attribute)
 
     # -- adaptive iso-convergence (DESIGN.md §7) ---------------------------
@@ -258,7 +321,10 @@ class Explainer:
         with the rung they converged at; their rows are excluded from later
         hops (the serving engine additionally re-buckets survivors — here
         rows are simply gathered, so each distinct (active-count, rung)
-        shape compiles once into ``cache``).
+        shape compiles once into ``cache``; under a mesh the active count is
+        first padded up to a multiple of the data-parallel extent so hops
+        shard — see DESIGN.md §9 — and ``info["mesh_fallbacks"]`` counts any
+        executable that still had to compile replicated).
 
         Path-ensemble methods expand each example to ``ensemble_size``
         sample rows first; the ladder then runs per ROW (each sample
@@ -277,26 +343,56 @@ class Explainer:
         ladder = schedules.m_ladder(self.m, m_max if m_max else 8 * self.m)
         cache = cache if cache is not None else {}
         compiles = 0
+        mesh_fallbacks = 0
         x, baseline, target, mask, n_samples = self.expand_inputs(
             x, baseline, target, mask
         )
         B = x.shape[0]
+        # data-parallel extent: hop batches are padded up to a multiple of
+        # this (mesh-divisible padding, DESIGN.md §9) so survivors shard
+        # instead of silently running replicated
+        if self.mesh is not None:
+            from repro.sharding import DEFAULT_RULES, dp_size
+
+            dp = dp_size(self.mesh, self.mesh_rules or DEFAULT_RULES)
+        else:
+            dp = 1
 
         def aot(key, fn, args):
-            nonlocal compiles
+            nonlocal compiles, mesh_fallbacks
             ex = cache.get(key)
             if ex is None:
+                jit_kw = {}
+                # dp > 1 guard matches ExplainEngine._executable: on a
+                # dp<=1 mesh there is nothing to shard, not a fallback
+                if self.mesh is not None and dp > 1:
+                    # shard every batch-leading input over the mesh's data
+                    # axes (DESIGN.md §9); the AOT executable then places
+                    # host arrays onto the mesh itself at call time. A tree
+                    # whose batch does not divide dp compiles replicated and
+                    # is COUNTED (info["mesh_fallbacks"]), never silent.
+                    from repro.sharding import explain_arg_shardings
+
+                    sh = explain_arg_shardings(
+                        self.mesh, args, self.mesh_rules or DEFAULT_RULES
+                    )
+                    if sh is not None:
+                        jit_kw["in_shardings"] = sh
+                    else:
+                        mesh_fallbacks += 1
                 sds = jax.tree.map(
                     lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), args
                 )
-                ex = jax.jit(fn).lower(*sds).compile()
+                ex = jax.jit(fn, **jit_kw).lower(*sds).compile()
                 cache[key] = ex
                 compiles += 1
             return ex
 
         # cache keys carry the explainer config AND input signature (dtype,
-        # target pytree structure): a cache dict shared across calls must
-        # never hand back an incompatible compiled program
+        # target pytree structure, mesh axis sizes): a cache dict shared
+        # across calls must never hand back an incompatible compiled program
+        from repro.sharding import mesh_cache_key
+
         cfg_key = (
             self.spec.name,
             self.schedule,
@@ -305,6 +401,7 @@ class Explainer:
             self.adaptive_chunk,
             str(x.dtype),
             jax.tree.structure(target),
+            mesh_cache_key(self.mesh),
         )
         has_mask = mask is not None
         args = (x, baseline, target, mask)
@@ -335,31 +432,42 @@ class Explainer:
             n_new = rung // 2
             refined = fam.refine(Schedule(jnp.asarray(a_act), jnp.asarray(w_act)))
             ra, rw = np.asarray(refined.alphas), np.asarray(refined.weights)
-            new_sched = Schedule(jnp.asarray(ra[:, n_new:]), jnp.asarray(rw[:, n_new:]))
+            # mesh-divisible padding (DESIGN.md §9): repeat the last survivor
+            # into pad slots so the hop batch divides dp and shards; pad-row
+            # results are sliced off below. sel indexes act-aligned arrays,
+            # rows the full batch. No-op (sel == arange) when dp == 1.
+            n_act = act.size
+            sel = np.concatenate(
+                [np.arange(n_act), np.full((-n_act) % dp, n_act - 1, np.int64)]
+            )
+            rows = act[sel]
+            new_sched = Schedule(
+                jnp.asarray(ra[sel][:, n_new:]), jnp.asarray(rw[sel][:, n_new:])
+            )
             hop_args = (
-                np.asarray(x)[act],
-                np.asarray(baseline)[act],
-                jax.tree.map(lambda t: t[act], tgt_np),
+                np.asarray(x)[rows],
+                np.asarray(baseline)[rows],
+                jax.tree.map(lambda t: t[rows], tgt_np),
                 new_sched,
-                IGState(acc_act, f_x[act], f_b[act]),
-                mask_np[act] if has_mask else None,
+                IGState(acc_act[sel], f_x[rows], f_b[rows]),
+                mask_np[rows] if has_mask else None,
             )
             ex = aot(
-                ("hop", cfg_key, act.size, n_new, x.shape[1:], has_mask),
+                ("hop", cfg_key, sel.size, n_new, x.shape[1:], has_mask),
                 self.resume,
                 hop_args,
             )
             res2, st2 = ex(*hop_args)
-            total_steps += act.size * n_new
-            d2 = np.asarray(res2.delta)
-            out_attr[act] = np.asarray(res2.attributions)
+            total_steps += n_act * n_new
+            d2 = np.asarray(res2.delta)[:n_act]
+            out_attr[act] = np.asarray(res2.attributions)[:n_act]
             delta[act] = d2
             m_used[act] = rung
             hops[act] += 1
             keep = d2 > threshold[act]
             act = act[keep]
-            a_act, w_act = ra[keep], rw[keep]
-            acc_act = np.asarray(st2.acc)[keep]
+            a_act, w_act = ra[:n_act][keep], rw[:n_act][keep]
+            acc_act = np.asarray(st2.acc)[:n_act][keep]
 
         final = self.reduce_result(
             IGResult(
@@ -377,6 +485,7 @@ class Explainer:
             "probe_forwards": B
             * probes.probe_cost(fam.probe, n_int=self.n_int, rounds=self.refine_rounds),
             "compiles": compiles,
+            "mesh_fallbacks": mesh_fallbacks,
             "ladder": ladder,
             "chunk": self.adaptive_chunk,
             "n_samples": n_samples,

@@ -216,6 +216,17 @@ METHODS: dict[str, MethodSpec] = {
 
 
 def get(name: str) -> MethodSpec:
+    """Look up a registered ``MethodSpec`` by name (specs pass through).
+
+        >>> sorted(METHODS)
+        ['expected_grad', 'idgi', 'ig', 'noise_tunnel']
+        >>> get("noise_tunnel").accum  # shares ig's executables (§8)
+        'riemann'
+        >>> get("nope")
+        Traceback (most recent call last):
+            ...
+        ValueError: unknown attribution method 'nope'; known: ['expected_grad', 'idgi', 'ig', 'noise_tunnel']
+    """
     if isinstance(name, MethodSpec):
         return name
     if name not in METHODS:

@@ -32,7 +32,19 @@ class Schedule(NamedTuple):
 
 
 def uniform(m: int, rule: str = "midpoint") -> Schedule:
-    """Baseline IG discretization (paper Eq. 2 uses the 'right'/'left' form)."""
+    """Baseline IG discretization (paper Eq. 2 uses the 'right'/'left' form).
+
+    Args:
+        m: node count; rule: "midpoint" | "left" | "right" | "trapezoid".
+
+    Returns a ``Schedule`` with Σw == 1 for every rule and m:
+
+        >>> s = uniform(4)
+        >>> [round(float(a), 3) for a in s.alphas]
+        [0.125, 0.375, 0.625, 0.875]
+        >>> float(s.weights.sum())
+        1.0
+    """
     if rule == "midpoint":
         a = (jnp.arange(m) + 0.5) / m
         w = jnp.full((m,), 1.0 / m)
@@ -282,7 +294,14 @@ def refine_nested(sched: Schedule) -> Schedule:
     prefix an earlier rung already accumulated. Quadrature does not care
     about node order; resumability does.
 
-    Works batched on (..., m) schedules; Σw == 1 is preserved exactly.
+    Works batched on (..., m) schedules; Σw == 1 is preserved exactly:
+
+        >>> s = uniform(4)
+        >>> r = refine_nested(s)
+        >>> r.alphas.shape, bool((r.alphas[:4] == s.alphas).all())
+        ((8,), True)
+        >>> bool((r.weights[:4] == 0.5 * s.weights).all())
+        True
     """
     a, w = sched.alphas, sched.weights
     order = jnp.argsort(a, axis=-1)  # stable (jnp default)
@@ -316,7 +335,13 @@ def refine_nested(sched: Schedule) -> Schedule:
 
 
 def m_ladder(m: int, m_max: int) -> tuple[int, ...]:
-    """Escalation rungs m, 2m, 4m, ... up to (at most) m_max."""
+    """Escalation rungs m, 2m, 4m, ... up to (at most) m_max.
+
+        >>> m_ladder(16, 64)
+        (16, 32, 64)
+        >>> m_ladder(8, 100)  # never overshoots m_max
+        (8, 16, 32, 64)
+    """
     assert m >= 1 and m_max >= m, (m, m_max)
     out = [m]
     while out[-1] * 2 <= m_max:
@@ -404,6 +429,13 @@ SCHEDULES: dict[str, ScheduleFamily] = {
 
 
 def family(name: str) -> ScheduleFamily:
+    """Look up a registered ``ScheduleFamily`` by name.
+
+        >>> sorted(SCHEDULES)
+        ['gauss', 'paper', 'refine', 'uniform', 'warp']
+        >>> family("paper").probe
+        'boundary'
+    """
     if name not in SCHEDULES:
         raise ValueError(f"unknown method {name!r}; known: {sorted(SCHEDULES)}")
     return SCHEDULES[name]

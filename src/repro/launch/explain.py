@@ -9,6 +9,16 @@ compilations, later rounds ride the compiled-executable cache. Prints
 per-bucket latency, compile time, and the cache hit-rate, then the chosen
 schedule vs uniform convergence comparison at the same step budget.
 
+Multi-device serving (DESIGN.md §9): ``--mesh dp,tp`` builds a
+(data=dp, model=tp) mesh and shards the folded (batch × step) stage-2 axis
+across the data axis. On a CPU-only host, ``--host-devices N`` forces N
+virtual devices (it must win the race with backend init, so it is applied
+before any jax call; the equivalent manual form is
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``):
+
+    PYTHONPATH=src python -m repro.launch.explain --arch llama3-8b \
+        --host-devices 4 --mesh 4,1 --requests 16 --rounds 3
+
 ``--method`` picks the attribution method from the ``repro.core.methods``
 registry (see the table in ``--help``); ``--schedule`` picks the
 interpolation schedule family — the two compose freely (DESIGN.md §8).
@@ -57,6 +67,9 @@ def report(engine: ExplainEngine) -> None:
     st = engine.stats
     print(f"  executable cache: hits={st.hits} misses={st.misses} "
           f"hit_rate={st.hit_rate:.2f}")
+    if engine.mesh is not None:
+        print(f"  mesh: {dict(zip(engine.mesh.axis_names, engine.mesh.devices.shape))} "
+              f"dp={engine.dp} mesh_fallbacks={st.mesh_fallbacks}")
     for shape in sorted(st.buckets):
         b = st.buckets[shape]
         print(
@@ -118,7 +131,24 @@ def main() -> int:
         "--sigma", type=float, default=0.0,
         help="ensemble perturbation scale (0 = method default)",
     )
+    ap.add_argument(
+        "--mesh", default="",
+        help="'dp,tp' device mesh for sharded serving (e.g. 4,1); empty = single-device",
+    )
+    ap.add_argument(
+        "--host-devices", type=int, default=0,
+        help="force N virtual CPU devices (multi-device demo on one host)",
+    )
     args = ap.parse_args()
+
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import ensure_host_devices, make_explain_mesh, parse_mesh_arg
+
+        dp, tp = parse_mesh_arg(args.mesh)
+        ensure_host_devices(args.host_devices or dp * tp)
+        mesh = make_explain_mesh(dp, tp)
+        print(f"mesh: data={dp} model={tp} over {jax.device_count()} devices")
 
     cfg = reduced(get_config(args.arch))
     if cfg.frontend or cfg.is_encdec:
@@ -137,6 +167,7 @@ def main() -> int:
             schedule=sched_name,
             m=args.m,
             n_int=args.n_int,
+            mesh=mesh,
             adaptive=args.adaptive,
             tol=args.tol,
             m_max=args.m_max,

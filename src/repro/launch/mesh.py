@@ -15,6 +15,8 @@ Axis semantics across the stack:
 """
 from __future__ import annotations
 
+import os
+
 import jax
 
 
@@ -27,3 +29,45 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_debug_mesh(data: int = 1, model: int = 1):
     """Tiny mesh over however many real devices exist (tests)."""
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def parse_mesh_arg(spec: str) -> tuple[int, int]:
+    """``--mesh dp,tp`` -> (dp, tp). A bare ``dp`` means tp=1."""
+    parts = [int(p) for p in spec.split(",") if p.strip()]
+    if not 1 <= len(parts) <= 2 or any(p < 1 for p in parts):
+        raise ValueError(f"--mesh wants 'dp' or 'dp,tp' with positive ints, got {spec!r}")
+    return (parts[0], parts[1] if len(parts) == 2 else 1)
+
+
+def ensure_host_devices(n: int) -> None:
+    """Request ``n`` virtual CPU devices for multi-device demos on one host.
+
+    Appends ``--xla_force_host_platform_device_count=n`` to ``XLA_FLAGS``,
+    which only takes effect if the JAX backend has not initialized yet — call
+    this before the first array op / ``jax.devices()``. Raises with the
+    manual-override instruction if the backend beat us to it (DESIGN.md §9;
+    docs/sharding.md shows the end-to-end demo).
+    """
+    if n <= 1:
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={n}".strip()
+        )
+    if jax.device_count() < n:  # initializes the backend — the final word
+        raise RuntimeError(
+            f"need {n} devices but the JAX backend already initialized with "
+            f"{jax.device_count()}; relaunch with XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n}"
+        )
+
+
+def make_explain_mesh(dp: int, tp: int = 1):
+    """(data=dp, model=tp) mesh for mesh-sharded explanation serving.
+
+    ``data`` carries the folded (batch × step) stage-2 axis
+    (``repro.sharding.explain_specs``); ``model`` is plumbed for backbone
+    tensor parallelism and may be 1.
+    """
+    return jax.make_mesh((dp, tp), ("data", "model"))

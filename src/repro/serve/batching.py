@@ -42,7 +42,10 @@ def bucket_for(size: int, ladder: Sequence[int]) -> int:
 
 
 def pad_rows(
-    rows: Sequence[int], batch_buckets: Optional[Sequence[int]]
+    rows: Sequence[int],
+    batch_buckets: Optional[Sequence[int]],
+    *,
+    multiple: int = 1,
 ) -> tuple[list[int], int]:
     """Pad a row-index list up the batch ladder by repeating the last row.
 
@@ -52,11 +55,20 @@ def pad_rows(
     real row (same reason as ``plan_buckets``: a fully-masked row would make
     the δ check degenerate) and are dropped on output.
 
+    ``multiple`` is the mesh-divisibility contract (DESIGN.md §9): the padded
+    B is additionally rounded up to a multiple of the mesh's data-parallel
+    extent, so ``explain_shardings`` can always shard the batch axis instead
+    of silently replicating. With the default pow-2 ladders and a pow-2 dp
+    size the rounded set stays closed (``max(rung, dp)`` is still a rung or
+    dp itself).
+
     Returns ``(padded_rows, B)`` with ``padded_rows[:len(rows)] == rows``.
     """
     rows = list(rows)
     assert rows, "pad_rows needs at least one row"
     B = bucket_for(len(rows), batch_buckets) if batch_buckets else len(rows)
+    if multiple > 1:
+        B = ((B + multiple - 1) // multiple) * multiple
     return rows + [rows[-1]] * (B - len(rows)), B
 
 
@@ -78,12 +90,16 @@ def plan_buckets(
     batch_buckets: Optional[Sequence[int]] = DEFAULT_BATCH_BUCKETS,
     max_batch: int = 0,
     pad_id: int = 0,
+    batch_multiple: int = 1,
 ) -> list[BucketBatch]:
     """Group heterogeneous ExplainRequests into padded shape buckets.
 
     requests: objects with ``.tokens`` (1-D int array) and ``.target`` (int).
     max_batch caps real rows per batch (0 = unlimited); batch_buckets=None
     disables batch-axis padding (B = number of grouped rows).
+    ``batch_multiple`` rounds every padded B up to a multiple of the mesh's
+    data-parallel extent (mesh-divisible padding, DESIGN.md §9) so sharded
+    engines never fall back to replication.
     """
     groups: dict[int, list[int]] = {}
     for i, r in enumerate(requests):
@@ -97,7 +113,7 @@ def plan_buckets(
             step = min(step, max(batch_buckets))  # never outgrow the ladder
         for lo in range(0, len(idx), step):
             rows = idx[lo : lo + step]
-            padded_rows, B = pad_rows(rows, batch_buckets)
+            padded_rows, B = pad_rows(rows, batch_buckets, multiple=batch_multiple)
             tokens = np.full((B, S), pad_id, np.int32)
             lens = np.empty((B,), np.int32)
             targets = np.empty((B,), np.int32)

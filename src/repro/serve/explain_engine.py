@@ -23,8 +23,18 @@ hot compiled program. This engine makes that true under real traffic:
     ``n_samples``× at plan time and perturbing rows in embedding space at
     batch-construction time (outside the compiled program), then averaging
     each request's contiguous sample results;
-  * an optional mesh shards the folded (batch × step) stage-2 axis via the
-    pjit specs in ``repro.sharding`` (``explain_shardings``).
+  * an optional device mesh shards the folded (batch × step) stage-2 axis
+    via the pjit specs in ``repro.sharding`` (DESIGN.md §9): every bucket /
+    start / hop executable is compiled with ``NamedSharding``s resolved per
+    argument tree (``explain_arg_shardings``), cache keys carry the mesh axis
+    sizes (``mesh_cache_key``) so single-device and sharded entries coexist,
+    and bucket batches are padded up to a multiple of the data-parallel
+    extent (``dp_size``) at plan time so the shardings always apply. δ and
+    the adaptive escalation decisions are computed from device-local per-row
+    reductions (feature axes stay replicated), so a sharded engine escalates
+    bit-identically to the unsharded one. A bucket that somehow reaches the
+    compile step without a dp-divisible batch serves replicated and is
+    counted in ``EngineStats.mesh_fallbacks`` — never silently.
 
 **Adaptive iso-convergence** (``adaptive=True``, DESIGN.md §7): ``m`` becomes
 the base rung of a pow-2 m-ladder instead of a fixed budget. Each bucket runs
@@ -42,6 +52,7 @@ recompiles at steady state, per-request shapes never exist.
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Optional, Sequence
 
@@ -56,6 +67,13 @@ from repro.core.baselines import pad_embedding
 from repro.core.probes import probe_cost
 from repro.core.schedule import Schedule, family, m_ladder
 from repro.models.registry import Model
+from repro.sharding import (
+    DEFAULT_RULES,
+    MeshRules,
+    dp_size,
+    explain_arg_shardings,
+    mesh_cache_key,
+)
 from repro.serve.batching import (
     DEFAULT_BATCH_BUCKETS,
     DEFAULT_SEQ_BUCKETS,
@@ -115,6 +133,11 @@ class EngineStats:
     # folding it into `buckets` would corrupt per-bucket serving latency
     hop_buckets: dict = field(default_factory=dict)  # (B, S) -> BucketStats
     adaptive: AdaptiveStats = field(default_factory=AdaptiveStats)
+    # buckets compiled WITHOUT shardings despite a multi-device mesh — the
+    # mesh-divisible-padding contract (DESIGN.md §9) makes this unreachable
+    # on the serving path; a nonzero count means padding was bypassed and
+    # those buckets ran replicated (correct, but not scaled)
+    mesh_fallbacks: int = 0
 
     @property
     def hit_rate(self) -> float:
@@ -135,7 +158,34 @@ class EngineStats:
 
 
 class ExplainEngine:
-    """Bucketed, cache-compiled NUIG serving over one model + param set."""
+    """Bucketed, cache-compiled NUIG serving over one model + param set.
+
+    Args (the load-bearing subset — see the module docstring for the design):
+        cfg / params: an ``ArchConfig`` and its parameter pytree.
+        method / schedule: names in ``methods.METHODS`` / ``schedule.SCHEDULES``.
+        m, n_int, chunk: the stage-2 budget, stage-1 intervals, scan chunk.
+        seq_buckets / batch_buckets: the (S, B) padding ladders.
+        mesh / mesh_rules: optional ``jax.sharding.Mesh`` — shards the folded
+            (batch × step) stage-2 axis across the mesh's data axes
+            (DESIGN.md §9).
+        adaptive / tol / m_max: δ-feedback serving up the pow-2 m-ladder.
+
+    Example (tiny CPU-reduced LM, one mixed-length round):
+
+        >>> import numpy as np, jax
+        >>> from repro.configs import ARCHS, reduced
+        >>> from repro.models.registry import Model
+        >>> cfg = reduced(ARCHS["llama3-8b"])
+        >>> params = Model(cfg).init(jax.random.PRNGKey(0))
+        >>> eng = ExplainEngine(cfg, params, m=4, n_int=2, seq_buckets=(8,))
+        >>> reqs = [ExplainRequest(np.arange(1, 6, dtype=np.int32), target=7)]
+        >>> out = eng.explain(reqs)
+        >>> out[0]["token_scores"].shape, eng.stats.misses
+        ((5,), 1)
+        >>> _ = eng.explain(reqs)  # same bucket -> pure cache hit
+        >>> eng.stats.misses, eng.stats.hits
+        (1, 1)
+    """
 
     def __init__(
         self,
@@ -154,6 +204,7 @@ class ExplainEngine:
         batch_buckets: Optional[Sequence[int]] = DEFAULT_BATCH_BUCKETS,
         max_batch: int = 0,
         mesh: Optional[jax.sharding.Mesh] = None,
+        mesh_rules: MeshRules = DEFAULT_RULES,
         adaptive: bool = False,
         tol: float = 1e-2,
         m_max: int = 0,
@@ -174,6 +225,13 @@ class ExplainEngine:
         self.batch_buckets = tuple(batch_buckets) if batch_buckets else None
         self.max_batch = max_batch
         self.mesh = mesh
+        self.mesh_rules = mesh_rules
+        # data-parallel extent: every bucket batch is padded to a multiple of
+        # this at plan time (mesh-divisible padding, DESIGN.md §9)
+        self.dp = dp_size(mesh, mesh_rules)
+        # cache keys carry the mesh axis sizes so single-device and sharded
+        # executables coexist in one cache
+        self._mesh_key = mesh_cache_key(mesh)
         self.adaptive = adaptive
         self.tol = tol
         self.m_max = m_max if m_max else (8 * m if adaptive else m)
@@ -206,8 +264,11 @@ class ExplainEngine:
 
     def _key(self, bucket: tuple[int, int]) -> tuple:
         # keyed by accumulator CLASS, not method name: methods sharing an
-        # accumulator share the warmed executables (DESIGN.md §8)
-        return (bucket, self._spec.accum, self.schedule, self.m, self.n_int, self.chunk)
+        # accumulator share the warmed executables (DESIGN.md §8); the mesh
+        # axis sizes ride every key so sharded and single-device entries
+        # coexist (DESIGN.md §9)
+        return (bucket, self._spec.accum, self.schedule, self.m, self.n_int,
+                self.chunk, self._mesh_key)
 
     def _attr_fn(self, embeds, baseline, aux, mask):
         return self._explainer.attribute(embeds, baseline, aux, mask=mask)
@@ -234,10 +295,18 @@ class ExplainEngine:
         )
 
     def _executable(self, key: tuple, bs: BucketStats, fn, args: tuple) -> Any:
-        """AOT-compiled program for one cache key (bucket shape + phase).
+        """AOT-compiled program (+ its input shardings) for one cache key.
 
         ``bs`` is the stats row (plan bucket or hop bucket) that the compile
-        time is charged to; the batch size for sharding comes from ``args``.
+        time is charged to. Under a mesh, input ``NamedSharding``s are
+        resolved per argument tree (``explain_arg_shardings`` — hop args
+        carry Schedule/IGState leaves beyond the 4-arg fixed-m tuple, all
+        handled by the same leading-dim rule) and baked into the executable;
+        mesh-divisible padding (DESIGN.md §9) guarantees they resolve, and a
+        bucket that reaches here indivisible anyway compiles replicated and
+        bumps ``EngineStats.mesh_fallbacks``. Returns ``(compiled,
+        shardings)`` — callers feed the pair to ``_timed_call`` so inputs are
+        placed onto the mesh before the call.
         """
         hit = key in self._cache
         if hit:
@@ -247,19 +316,23 @@ class ExplainEngine:
         bs.compiles += 1
         t0 = time.perf_counter()
         jit_kw = {}
-        # hop args carry extra leaves (schedule, state) beyond the 4-arg
-        # spec tree that explain_shardings describes — replicate those
-        if self.mesh is not None and fn in (self._attr_fn, self._start_fn):
-            from repro.sharding import explain_shardings
-
-            shardings = explain_shardings(self.mesh, batch=args[0].shape[0])
+        shardings = None
+        if self.mesh is not None and self.dp > 1:
+            shardings = explain_arg_shardings(self.mesh, args, self.mesh_rules)
             if shardings is not None:
                 jit_kw["in_shardings"] = shardings
+            else:
+                self.stats.mesh_fallbacks += 1
+                warnings.warn(
+                    f"ExplainEngine: bucket batch {args[0].shape[0]} does not "
+                    f"divide dp={self.dp}; serving replicated (key={key[:2]})",
+                    stacklevel=2,
+                )
         sds = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), args)
         compiled = jax.jit(fn, **jit_kw).lower(*sds).compile()
         bs.compile_s += time.perf_counter() - t0
-        self._cache[key] = compiled
-        return compiled
+        self._cache[key] = (compiled, shardings)
+        return self._cache[key]
 
     # -- serving -----------------------------------------------------------
 
@@ -281,29 +354,51 @@ class ExplainEngine:
             # path-ensemble perturbation in embedding space: rows are already
             # replicated requests (see explain()), so each row draws its own
             # iid sample here — OUTSIDE the compiled program, which is what
-            # keeps ensemble methods on the shared riemann executables. The
-            # key is a pure function of the bucket's (expanded) request
-            # indices, NOT a call counter: replayed traffic must draw the
-            # same ensemble so its escalation path — and therefore the set
-            # of hop shapes it touches — replays exactly (zero recompiles).
-            key = jax.random.PRNGKey(self.sample_seed)
-            key = jax.random.fold_in(key, bb.bucket[1])
-            for i in bb.indices:
-                key = jax.random.fold_in(key, i)
-            embeds, baseline = self._spec.expand(embeds, baseline, key, 1, self.sigma)
+            # keeps ensemble methods on the shared riemann executables. Each
+            # row's key is a pure function of ITS OWN (expanded) request
+            # index, NOT a call counter and NOT the batch shape: replayed
+            # traffic must draw the same ensemble so its escalation path —
+            # and therefore the set of hop shapes it touches — replays
+            # exactly (zero recompiles), and a mesh-padded bucket (B rounded
+            # up to the dp multiple, DESIGN.md §9) must draw the same
+            # per-row ensemble as the single-device bucket (sharded parity).
+            # Batch-pad rows duplicate the last real request's index, so
+            # their (discarded) noise duplicates too.
+            base = jax.random.fold_in(
+                jax.random.PRNGKey(self.sample_seed), bb.bucket[1]
+            )
+            padded = list(bb.indices)
+            padded += [padded[-1]] * (bb.bucket[0] - len(padded))
+            # one vmapped draw, not a per-row loop: same per-row streams
+            # (each row's draw depends only on its own key), O(1) dispatches
+            keys = jax.vmap(lambda i: jax.random.fold_in(base, i))(
+                jnp.asarray(padded, jnp.uint32)
+            )
+            e2, b2 = jax.vmap(
+                lambda e, b, k: self._spec.expand(
+                    e[None], b[None], k, 1, self.sigma
+                )
+            )(embeds, baseline, keys)
+            embeds, baseline = e2[:, 0], b2[:, 0]
         return embeds, baseline, aux, mask
 
     def _run_bucket(self, bb: BucketBatch) -> Any:
         args = self._bucket_inputs(bb)
         bs = self.stats.bucket(bb.bucket)
-        fn = self._executable(self._key(bb.bucket), bs, self._attr_fn, args)
-        res = self._timed_call(bs, fn, args)
+        ex = self._executable(self._key(bb.bucket), bs, self._attr_fn, args)
+        res = self._timed_call(bs, ex, args)
         bs.requests += len(bb.indices)
         return res
 
-    def _timed_call(self, bs: BucketStats, fn, args: tuple) -> Any:
+    def _timed_call(self, bs: BucketStats, ex: tuple, args: tuple) -> Any:
+        """Run one cached ``(compiled, shardings)`` entry; sharded inputs are
+        placed onto the mesh first (host→device layout is part of the serving
+        latency, so it stays inside the timer)."""
+        compiled, shardings = ex
         t0 = time.perf_counter()
-        out = jax.block_until_ready(fn(*args))
+        if shardings is not None:
+            args = jax.device_put(args, shardings)
+        out = jax.block_until_ready(compiled(*args))
         bs.total_s += time.perf_counter() - t0
         bs.calls += 1
         return out
@@ -322,10 +417,10 @@ class ExplainEngine:
         chunk = self._explainer.adaptive_chunk
         args = self._bucket_inputs(bb)
         key = ("start", bb.bucket, self._spec.accum, self.schedule, self.m,
-               self.n_int, chunk)
+               self.n_int, chunk, self._mesh_key)
         bs = self.stats.bucket(bb.bucket)
-        fn = self._executable(key, bs, self._start_fn, args)
-        res, state, sched = self._timed_call(bs, fn, args)
+        ex = self._executable(key, bs, self._start_fn, args)
+        res, state, sched = self._timed_call(bs, ex, args)
         bs.requests += len(bb.indices)
 
         n_real = len(bb.indices)
@@ -366,7 +461,7 @@ class ExplainEngine:
                 Schedule(jnp.asarray(a_act), jnp.asarray(w_act))
             )
             ra, rw = np.asarray(refined.alphas), np.asarray(refined.weights)
-            rows, B2 = pad_rows(act, self.batch_buckets)
+            rows, B2 = pad_rows(act, self.batch_buckets, multiple=self.dp)
             # schedule/state slot per padded row: pad_rows keeps act as a
             # prefix and repeats the last real row into the pad slots
             pad_sel = list(range(len(act))) + [len(act) - 1] * (B2 - len(act))
@@ -379,7 +474,8 @@ class ExplainEngine:
                 Schedule(ra[pad_sel, n_new:], rw[pad_sel, n_new:]),
                 ig.IGState(acc_act[pad_sel], f_x[rows], f_b[rows]),
             )
-            hop_key = ("hop", hop_bucket, self._spec.accum, n_new, chunk)
+            hop_key = ("hop", hop_bucket, self._spec.accum, n_new, chunk,
+                       self._mesh_key)
             hbs = self.stats.hop_bucket(hop_bucket)
             hop = self._executable(hop_key, hbs, self._hop_fn, hop_args)
             res2, st2 = self._timed_call(hbs, hop, hop_args)
@@ -477,6 +573,7 @@ class ExplainEngine:
             batch_buckets=self.batch_buckets,
             max_batch=self.max_batch,
             pad_id=self.pad_id,
+            batch_multiple=self.dp,
         )
         out: list[Optional[dict]] = [None] * len(expanded)
         for bb in plan:

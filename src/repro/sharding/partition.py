@@ -176,22 +176,105 @@ def explain_specs(mesh: Mesh, rules: MeshRules = DEFAULT_RULES) -> tuple:
     )
 
 
+def dp_size(mesh: Optional[Mesh], rules: MeshRules = DEFAULT_RULES) -> int:
+    """Total data-parallel extent of a mesh under ``rules.batch_axes``.
+
+    This is the divisor every bucket batch must be padded up to before the
+    engine can shard it (``batching.plan_buckets(batch_multiple=...)``) —
+    the mesh-divisible-padding contract of DESIGN.md §9. Returns 1 for
+    ``mesh=None`` (single-device serving).
+    """
+    if mesh is None:
+        return 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    axes = [a for a in rules.batch_axes if a in sizes]
+    return int(np.prod([sizes[a] for a in axes])) if axes else 1
+
+
+def mesh_cache_key(mesh: Optional[Mesh]) -> tuple:
+    """Hashable mesh fingerprint for executable-cache keys.
+
+    ``ExplainEngine`` folds this into every cache key so single-device and
+    sharded entries coexist in one cache (and a mesh swap can never hand
+    back an executable compiled for different device placement). ``()`` for
+    ``mesh=None``.
+    """
+    if mesh is None:
+        return ()
+    return tuple(zip(mesh.axis_names, mesh.devices.shape))
+
+
 def explain_shardings(
     mesh: Mesh, *, batch: int, rules: MeshRules = DEFAULT_RULES
 ) -> Optional[tuple]:
     """NamedShardings for ``explain_specs``, or None when the bucket's batch
-    does not divide the mesh's data axes (replicate rather than error — small
-    buckets on big meshes)."""
-    axes = [a for a in rules.batch_axes if a in mesh.axis_names]
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    prod = int(np.prod([sizes[a] for a in axes])) if axes else 1
-    if prod <= 1 or batch % prod != 0:
+    does not divide the mesh's data axes.
+
+    None is a *fallback the serving path is not supposed to reach*: the
+    engine pads every bucket batch up to a multiple of ``dp_size`` at plan
+    time (DESIGN.md §9), so a None here at serving time means mesh-divisible
+    padding was bypassed — ``ExplainEngine`` serves the bucket replicated and
+    counts it in ``EngineStats.mesh_fallbacks`` instead of failing.
+    """
+    dp = dp_size(mesh, rules)
+    if dp <= 1 or batch % dp != 0:
         return None
     return jax.tree.map(
         lambda s: NamedSharding(mesh, s),
         explain_specs(mesh, rules),
         is_leaf=lambda x: isinstance(x, P),
     )
+
+
+def explain_arg_shardings(
+    mesh: Mesh, args: Any, rules: MeshRules = DEFAULT_RULES
+) -> Optional[Any]:
+    """Per-bucket rule resolution for an *arbitrary* engine argument tree.
+
+    The fixed-m call takes exactly the 4-tuple ``explain_specs`` describes,
+    but the adaptive start/hop executables carry extra leaves (the
+    materialized ``Schedule``, the resumable ``IGState``). This resolves a
+    NamedSharding per leaf with one rule: a leaf whose leading dim is the
+    (dp-divisible) bucket batch shards on the data axes, everything else —
+    scalars, shared (m,) schedules — replicates. Returns None when the mesh
+    has no data parallelism or the tree's batch dim does not divide it
+    (same fallback contract as ``explain_shardings``).
+    """
+    dp = dp_size(mesh, rules)
+    if dp <= 1:
+        return None
+    leaves = jax.tree.leaves(args)
+    batch = max((l.shape[0] for l in leaves if getattr(l, "ndim", 0) >= 1), default=0)
+    if batch == 0 or batch % dp != 0:
+        return None
+    b = batch_spec(mesh, rules)
+    bax = b[0] if len(b) else None
+
+    def one(x):
+        if getattr(x, "ndim", 0) >= 1 and x.shape[0] == batch:
+            return NamedSharding(mesh, P(bax, *([None] * (x.ndim - 1))))
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(one, args)
+
+
+def explain_reduce_specs(mesh: Mesh, rules: MeshRules = DEFAULT_RULES) -> dict:
+    """shard_map-friendly specs for the engine's per-row reductions.
+
+    Every reduction the serving path takes a decision on — the completeness
+    gap δ, and IDGI's inner products ⟨g, g⟩ / ⟨g, x − x′⟩ — contracts over
+    *feature* axes only, which stay replicated under ``explain_specs``. Under
+    ``shard_map`` along the folded (batch × step) axis each device therefore
+    reduces its own rows with no collective, in the same order as the
+    unsharded program: device-local reduction ⇒ bit-identical δ ⇒ identical
+    adaptive escalation traces (DESIGN.md §9). These specs name that layout:
+
+      folded      — a (B·c, *F) stage-2 gradient block: rows on data axes.
+      row_scalar  — a (B,) per-row reduction output (δ, ⟨g,g⟩, ⟨g,x−x′⟩).
+    """
+    b = batch_spec(mesh, rules)
+    bax = b[0] if len(b) else None
+    return {"folded": P(bax, None), "row_scalar": P(bax)}
 
 
 def spec_for_batch_tree(batch: Any, mesh: Mesh, rules: MeshRules = DEFAULT_RULES, *, seq_sharded: bool = False) -> Any:

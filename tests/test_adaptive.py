@@ -194,8 +194,8 @@ def test_engine_full_ladder_bit_identical_lm(lm):
     args = eng._bucket_inputs(bb)
     embeds, baseline, aux, mask = args
     chunk = eng._explainer.adaptive_chunk
-    start = eng._executable(
-        ("start", bb.bucket, "riemann", "paper", 4, 4, chunk),
+    start, _ = eng._executable(
+        ("start", bb.bucket, "riemann", "paper", 4, 4, chunk, ()),
         eng.stats.bucket(bb.bucket),
         eng._start_fn,
         args,
@@ -208,8 +208,8 @@ def test_engine_full_ladder_bit_identical_lm(lm):
         jnp.zeros_like(state0.acc), state0.f_x, state0.f_baseline
     )
     fixed_args = (embeds, baseline, aux, mask, sched, zero_state)
-    fixed_fn = eng._executable(
-        ("hop", bb.bucket, "riemann", 16, chunk),
+    fixed_fn, _ = eng._executable(
+        ("hop", bb.bucket, "riemann", 16, chunk, ()),
         eng.stats.hop_bucket(bb.bucket),
         eng._hop_fn,
         fixed_args,
