@@ -1,0 +1,218 @@
+"""Hot-path bandwidth benchmark (DESIGN.md §10) -> results/BENCH_hotpath.json.
+
+Serves identical mixed-length traffic through a FUSED stage-2 engine and the
+materializing (unfused) oracle engine and gates three claims, per smoke
+bucket and per attribution method:
+
+  1. **bytes** — the fused fixed-m executable's ``cost_analysis`` bytes
+     accessed is strictly lower than the materializing path's at every
+     bucket (riemann-class methods; IDGI's quadratic accumulator needs its
+     per-step gradients either way, so its gate is no-worse);
+  2. **latency** — warmed fused wall-clock is no worse than unfused on the
+     aggregate across the four methods (min-of-rounds per engine, small
+     CI-noise allowance; per-method ratios are recorded, not gated —
+     single-method walls jitter ±50% on shared hosts);
+  3. **traces** — δ-adaptive serving escalates IDENTICALLY: per-request
+     ``m_used`` / ``hops`` / ``converged`` from the fused engine equal the
+     unfused engine's exactly, for all four methods.
+
+The sweep runs at ``compute_dtype=float32``: the trace gate isolates
+program-structure effects, and under bf16 the weight-seeded fused backward
+legitimately rounds cotangents at a different scale (≲0.5% relative —
+tolerance-tested in tests/test_hotpath.py, not trace-gated here).
+
+The autotuner rides the same sweep: every bucket is tuned
+(``serve.autotune``), the tuned engine must replay traffic with ZERO
+steady-state recompiles, and its warmed latency is recorded. If a committed
+baseline exists (results/BENCH_hotpath_baseline.json), fused bytes-accessed
+per bucket must not regress beyond 2% — the CI ratchet.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import RESULTS_DIR
+from repro.core.methods import METHODS
+
+BASELINE = os.path.join(RESULTS_DIR, "BENCH_hotpath_baseline.json")
+# warmed-latency gate allowance: CPU CI wall-clock is noisy; the claim
+# "fused is no worse" is gated at this multiple of the unfused median and
+# the raw medians ride the artifact for inspection
+LATENCY_SLACK = 1.25
+BYTES_REGRESSION_SLACK = 1.02
+
+
+def _warmed_wall(engine, reqs, rounds=3):
+    """Min-of-rounds warmed wall — the noise-robust latency estimator: the
+    best observed round is the one least polluted by scheduler jitter on a
+    shared CI host, and fusion can only shift the floor, not the noise."""
+    engine.explain(reqs)  # compile + warm
+    ts = []
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        engine.explain(reqs)
+        ts.append(time.perf_counter() - t0)
+    return float(np.min(ts))
+
+
+def run(
+    *,
+    arch: str = "llama3-8b",
+    requests: int = 8,
+    m: int = 16,
+    n_int: int = 4,
+    tol: float = 1e-2,
+    rounds: int = 3,
+    smoke: bool = False,
+    seed: int = 0,
+) -> dict:
+    from repro.configs import ARCHS, reduced
+    from repro.launch.explain import make_traffic
+    from repro.models.registry import Model
+    from repro.serve import ExplainEngine, autotune_engine
+
+    if smoke:
+        requests, m, rounds = 6, 8, 3
+    cfg = dataclasses.replace(reduced(ARCHS[arch]), compute_dtype="float32")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    reqs = make_traffic(cfg, requests, 9, 28, np.random.default_rng(seed))
+
+    out = {
+        "arch": arch, "m": m, "n_int": n_int, "requests": requests,
+        "rounds": rounds, "tol": tol, "device_kind": jax.devices()[0].device_kind,
+        "methods": {}, "gates": {},
+    }
+    failures: list[str] = []
+
+    # -- per-method fused-vs-unfused sweep (fixed-m bytes/latency + traces) --
+    for method in sorted(METHODS):
+        spec = METHODS[method]
+        row: dict = {"accum": spec.accum}
+        for label, fused in (("unfused", False), ("fused", True)):
+            eng = ExplainEngine(
+                cfg, params, method=method, m=m, n_int=n_int, fused=fused
+            )
+            wall = _warmed_wall(eng, reqs, rounds)
+            row[label] = {
+                "warmed_wall_s": wall,
+                "buckets": {
+                    f"B{b[0]}xS{b[1]}": {
+                        "bytes_accessed": bs.bytes_accessed,
+                        "peak_bytes": bs.peak_bytes,
+                        "mean_latency_ms": 1e3 * bs.mean_latency_s,
+                    }
+                    for b, bs in sorted(eng.stats.buckets.items())
+                },
+            }
+        # bytes gate: strict reduction for grad-linear (riemann) classes,
+        # no-worse for quadratic ones (per-step grads are irreducible)
+        for bucket in row["unfused"]["buckets"]:
+            bu = row["unfused"]["buckets"][bucket]["bytes_accessed"]
+            bf = row["fused"]["buckets"][bucket]["bytes_accessed"]
+            if spec.grad_linear and not bf < bu:
+                failures.append(f"{method}/{bucket}: fused bytes {bf} !< {bu}")
+            if not spec.grad_linear and bf > bu:
+                failures.append(f"{method}/{bucket}: fused bytes {bf} > {bu}")
+        wu, wf = row["unfused"]["warmed_wall_s"], row["fused"]["warmed_wall_s"]
+        row["latency_ratio"] = wf / wu
+
+        # adaptive trace parity: identical escalation per request
+        traces = {}
+        for label, fused in (("unfused", False), ("fused", True)):
+            eng = ExplainEngine(
+                cfg, params, method=method, m=m, n_int=n_int,
+                adaptive=True, tol=tol, m_max=4 * m, fused=fused,
+            )
+            res = eng.explain(reqs)
+            traces[label] = [
+                (r["m_used"], r["hops"], r["converged"]) for r in res
+            ]
+        row["traces_equal"] = traces["unfused"] == traces["fused"]
+        row["traces"] = {
+            k: [list(map(int, t[:2])) + [bool(t[2])] for t in v]
+            for k, v in traces.items()
+        }
+        if not row["traces_equal"]:
+            failures.append(f"{method}: adaptive traces diverge {traces}")
+        out["methods"][method] = row
+        print(
+            f"hotpath [{method:13s}] latency fused/unfused={row['latency_ratio']:.2f} "
+            f"traces_equal={row['traces_equal']}"
+        )
+
+    # latency gate on the AGGREGATE across the method zoo: per-method wall
+    # ratios jitter ±50% on shared CI hosts (noise_tunnel and expected_grad
+    # run the same riemann executables yet measure differently run to run),
+    # while the four-method sum is stable; per-method ratios stay in the
+    # artifact for inspection
+    total_u = sum(r["unfused"]["warmed_wall_s"] for r in out["methods"].values())
+    total_f = sum(r["fused"]["warmed_wall_s"] for r in out["methods"].values())
+    out["total_latency_ratio"] = total_f / total_u
+    if total_f > LATENCY_SLACK * total_u:
+        failures.append(
+            f"fused warmed latency {total_f:.3f}s > {LATENCY_SLACK}x "
+            f"unfused {total_u:.3f}s across the method zoo"
+        )
+
+    # -- autotune + zero-recompile replay (fused, default method) -----------
+    base_eng = ExplainEngine(cfg, params, m=m, n_int=n_int, fused=True)
+    tune_report = autotune_engine(
+        base_eng, reqs, rounds=rounds, results_dir=RESULTS_DIR
+    )
+    tuned = ExplainEngine(
+        cfg, params, m=m, n_int=n_int, fused=True,
+        autotune=True, autotune_dir=RESULTS_DIR,
+    )
+    tuned_wall = _warmed_wall(tuned, reqs, rounds)
+    warmed_misses = tuned.stats.misses
+    tuned.explain(reqs)
+    recompiles = tuned.stats.misses - warmed_misses
+    out["autotune"] = {
+        "winners": {k: v["winner"] for k, v in tune_report["buckets"].items()},
+        "cache_path": tune_report.get("path"),
+        "tuned_warmed_wall_s": tuned_wall,
+        "steady_state_recompiles": recompiles,
+    }
+    if recompiles:
+        failures.append(f"autotuned replay recompiled {recompiles}x")
+
+    # -- bytes ratchet vs the committed baseline ----------------------------
+    if os.path.exists(BASELINE):
+        with open(BASELINE) as fh:
+            base = json.load(fh)
+        for method, row in out["methods"].items():
+            for bucket, cur in row["fused"]["buckets"].items():
+                prev = (
+                    base.get("methods", {}).get(method, {})
+                    .get("fused", {}).get("buckets", {}).get(bucket)
+                )
+                if prev and cur["bytes_accessed"] > BYTES_REGRESSION_SLACK * prev[
+                    "bytes_accessed"
+                ]:
+                    failures.append(
+                        f"{method}/{bucket}: fused bytes {cur['bytes_accessed']} "
+                        f"regressed vs baseline {prev['bytes_accessed']}"
+                    )
+        out["baseline_checked"] = True
+    else:
+        out["baseline_checked"] = False
+
+    out["failures"] = failures
+    out["pass"] = not failures
+    print(f"hotpath pass={out['pass']}" + (f" failures={failures}" if failures else ""))
+    return out
+
+
+def main():
+    run(smoke=True)
+
+
+if __name__ == "__main__":
+    main()

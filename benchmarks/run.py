@@ -8,10 +8,15 @@ Order:
   latency      — Fig 2(a) + Fig 6(a,b)  wall-clock; iso-delta speedup; overhead
   quality      — beyond-paper: method-zoo insertion/deletion AUC + latency
                  per method × schedule -> results/BENCH_quality.json
+  hotpath      — beyond-paper: fused-vs-materializing stage 2 bytes/latency
+                 + adaptive trace parity -> results/BENCH_hotpath.json
   lm_convergence — beyond-paper: NUIG on the assigned LM families
   roofline     — §Roofline table from the dry-run artifacts
 
-Aggregated JSON lands in results/benchmarks.json.
+Aggregated JSON lands in results/benchmarks.json; every targeted sweep
+(--adaptive/--quality/--mesh/--hotpath) also appends a one-line summary
+record to results/BENCH_trajectory.jsonl so the perf trajectory tracks ALL
+benchmark axes across PRs, not just tools/perf_iterate.py runs.
 """
 from __future__ import annotations
 
@@ -22,6 +27,7 @@ import time
 
 from benchmarks import (
     convergence,
+    hotpath,
     latency,
     lm_convergence,
     pathinfo,
@@ -30,6 +36,8 @@ from benchmarks import (
 )
 from benchmarks.common import RESULTS_DIR, accuracy, load_or_train_cnn
 
+TRAJECTORY = os.path.join(RESULTS_DIR, "BENCH_trajectory.jsonl")
+
 
 def _write(name: str, payload: dict) -> str:
     os.makedirs(RESULTS_DIR, exist_ok=True)
@@ -37,6 +45,14 @@ def _write(name: str, payload: dict) -> str:
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, default=str)
     return path
+
+
+def _trajectory(kind: str, summary: dict) -> None:
+    """Append one summary record per sweep to the perf trajectory."""
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    rec = {"ts": time.strftime("%Y-%m-%dT%H:%M:%S"), "kind": kind, **summary}
+    with open(TRAJECTORY, "a") as fh:
+        fh.write(json.dumps(rec, default=str) + "\n")
 
 
 def main() -> int:
@@ -64,6 +80,12 @@ def main() -> int:
         help="mesh scaling sweep only (e.g. 2,1) -> results/BENCH_mesh.json; "
         "forces DP*TP virtual host devices if fewer exist",
     )
+    ap.add_argument(
+        "--hotpath",
+        action="store_true",
+        help="fused stage-2 bandwidth gate only -> results/BENCH_hotpath.json "
+        "(with --smoke: the CI-sized config)",
+    )
     args = ap.parse_args()
 
     if args.mesh:
@@ -75,7 +97,28 @@ def main() -> int:
         ensure_host_devices(dp * tp)
         out = latency.mesh_run(args.mesh, requests=8, rounds=3)
         path = _write("BENCH_mesh.json", out)
+        _trajectory("mesh", {
+            "mesh": out["mesh"], "speedup": out["speedup"],
+            "parity_max_abs_diff": out["parity_max_abs_diff"],
+            "pass": out["pass"],
+        })
         print(f"# mesh bench -> {path}")
+        return 0 if out["pass"] else 1
+
+    if args.hotpath:
+        out = hotpath.run(smoke=args.smoke)
+        path = _write("BENCH_hotpath.json", out)
+        _trajectory("hotpath", {
+            "latency_ratio": {
+                k: v["latency_ratio"] for k, v in out["methods"].items()
+            },
+            "traces_equal": all(
+                v["traces_equal"] for v in out["methods"].values()
+            ),
+            "autotune_recompiles": out["autotune"]["steady_state_recompiles"],
+            "pass": out["pass"],
+        })
+        print(f"# hotpath bench -> {path}")
         return 0 if out["pass"] else 1
 
     if args.adaptive or args.smoke:
@@ -83,12 +126,23 @@ def main() -> int:
             batch_size=4 if args.smoke else 8, smoke=args.smoke
         )
         path = _write("BENCH_adaptive.json", out)
+        _trajectory("adaptive", {
+            "smoke": args.smoke,
+            "speedups": {
+                k: v.get("speedup_vs_uniform")
+                for k, v in out.get("methods", {}).items()
+            },
+            "pass": out["pass"],
+        })
         print(f"# adaptive bench -> {path}")
         return 0 if out["pass"] else 1
 
     if args.quality:
         out = quality.run()
         path = _write("BENCH_quality.json", out)
+        _trajectory("quality", {
+            "cells": len(out.get("cells", {})), "pass": out["pass"],
+        })
         print(f"# quality bench -> {path}")
         return 0 if out["pass"] else 1
 
@@ -108,6 +162,11 @@ def main() -> int:
     )
     out["quality"] = quality.run(batch_size=4 if args.fast else 8)
     _write("BENCH_quality.json", out["quality"])
+    # hotpath always runs the smoke config inside the full sweep: the full
+    # fused-vs-unfused grid is the targeted --hotpath run's job
+    out["hotpath"] = hotpath.run(smoke=True)
+    _write("BENCH_hotpath.json", out["hotpath"])
+    _trajectory("hotpath", {"smoke": True, "pass": out["hotpath"]["pass"]})
     out["lm_convergence"] = lm_convergence.run(
         arch_ids=("llama3-8b",) if args.fast else lm_convergence.DEFAULT_ARCHS,
         m=16 if args.fast else 32,

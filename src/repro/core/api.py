@@ -34,6 +34,7 @@ executables are compiled with ``NamedSharding``s over the leading batch dim
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 from typing import Any, Callable, Optional, Union
 
@@ -84,7 +85,13 @@ class Explainer:
     min_steps: int = 1
     rule: str = "midpoint"  # uniform-rule variant
     chunk: int = 0  # stage-2 step chunk (0 = all at once)
+    # fused stage 2 (DESIGN.md §10): interpolation composed with the model
+    # forward under one VJP — the (B·chunk, *F) interpolant batch never
+    # crosses a program boundary, and grad-linear accumulators collapse the
+    # per-step gradient batch into one (B, *F) cotangent.
+    fused: bool = False
     interp_fn: Callable = None  # optional Pallas kernel injection
+    interp_add_fn: Callable = None  # fused-path kernel injection (§10)
     accum_fn: Callable = None
     # path-ensemble controls (noise_tunnel / expected_grad): 0 samples means
     # "the method's registered default"; ``sample_seed`` makes the ensemble
@@ -236,8 +243,12 @@ class Explainer:
 
     def _ig_kwargs(self) -> dict:
         kw = {}
+        if self.fused:
+            kw["fused"] = True
         if self.interp_fn is not None:
             kw["interp_fn"] = self.interp_fn
+        if self.interp_add_fn is not None:
+            kw["interp_add_fn"] = self.interp_add_fn
         if self.accum_fn is not None:
             kw["accum_fn"] = self.accum_fn
         return kw
@@ -358,11 +369,17 @@ class Explainer:
         else:
             dp = 1
 
-        def aot(key, fn, args):
+        def aot(key, fn, args, donate=()):
             nonlocal compiles, mesh_fallbacks
             ex = cache.get(key)
             if ex is None:
                 jit_kw = {}
+                if donate:
+                    # hop executables donate the IGState (DESIGN.md §10):
+                    # the (B, *F) f32 accumulator is rebuilt fresh per rung
+                    # and never read back, so the executable may write the
+                    # resumed accumulator in place instead of copying
+                    jit_kw["donate_argnums"] = donate
                 # dp > 1 guard matches ExplainEngine._executable: on a
                 # dp<=1 mesh there is nothing to shard, not a fallback
                 if self.mesh is not None and dp > 1:
@@ -383,7 +400,13 @@ class Explainer:
                 sds = jax.tree.map(
                     lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), args
                 )
-                ex = jax.jit(fn, **jit_kw).lower(*sds).compile()
+                with warnings.catch_warnings():
+                    # CPU cannot honor donation; the aliasing request is
+                    # still correct (and effective) on GPU/TPU backends
+                    warnings.filterwarnings(
+                        "ignore", message=".*donated buffers were not usable.*"
+                    )
+                    ex = jax.jit(fn, **jit_kw).lower(*sds).compile()
                 cache[key] = ex
                 compiles += 1
             return ex
@@ -399,6 +422,7 @@ class Explainer:
             self.m,
             self.n_int,
             self.adaptive_chunk,
+            self.fused,
             str(x.dtype),
             jax.tree.structure(target),
             mesh_cache_key(self.mesh),
@@ -456,6 +480,7 @@ class Explainer:
                 ("hop", cfg_key, sel.size, n_new, x.shape[1:], has_mask),
                 self.resume,
                 hop_args,
+                donate=(4,),  # the IGState — see aot()
             )
             res2, st2 = ex(*hop_args)
             total_steps += n_act * n_new

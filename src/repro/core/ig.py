@@ -32,8 +32,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import methods as methods_mod
-from repro.core.methods import MethodSpec
-from repro.core.paths import interpolate, mask_to_baseline
+from repro.core.methods import MethodSpec, expand_mask
+from repro.core.paths import interp_add, interpolate, mask_to_baseline
 from repro.core.probes import ScalarFn, repeat_tree
 from repro.core.schedule import Schedule
 
@@ -73,7 +73,9 @@ def attribute(
     method: Union[str, MethodSpec] = "ig",
     mask: Optional[jax.Array] = None,
     chunk: int = 0,
+    fused: bool = False,
     interp_fn: Callable = interpolate,
+    interp_add_fn: Callable = interp_add,
     accum_fn: Optional[Callable] = None,
     state: Optional[IGState] = None,
     state_scale: float = 1.0,
@@ -93,6 +95,22 @@ def attribute(
     accum_fn: optional accumulator override (Pallas kernel injection); must
     honor the MethodSpec accumulator signature
     ``(acc, grads, weights, *, diff, mask)``.
+
+    Fused stage 2 (``fused=True``, DESIGN.md §10): the interpolants are
+    generated INSIDE the differentiated chunk function — interpolation
+    composed with the model forward under one VJP — so the (B·chunk, *F)
+    interpolant batch is never a program-boundary tensor that must round-trip
+    HBM. For ``grad_linear`` accumulator classes (riemann) the chunk's whole
+    weighted gradient sum Σ_k w_k g_k is recovered as ONE (B, *F) cotangent
+    (the transpose of the step-axis broadcast), so the per-step gradient
+    batch never materializes either; quadratic classes (idgi) keep per-step
+    gradients but still fuse the interpolation into the backward program.
+    ``interp_add_fn`` is the fused path's kernel-injection hook — the
+    interp-plus-carry unit (``paths.interp_add`` oracle; Pallas custom-VJP
+    drop-in in ``repro.kernels.interp_accum.ops``). The fused and unfused
+    paths accumulate in f32 either way and agree to float tolerance (not
+    bitwise — the weight multiply rides the VJP seed instead of the
+    accumulator); each is separately bit-identical under adaptive resume.
 
     Resumability (DESIGN.md §7): pass ``state`` from a prior call to continue
     accumulating — ``sched`` then holds only the NEW nodes, the endpoint
@@ -124,14 +142,51 @@ def attribute(
 
     grad_f = jax.grad(lambda xs, t: f(xs, t).sum())
     mkw = {} if mask is None else {"mask": mask}
+    feat = x.shape[1:]
 
     def step(acc, xs):
         a, w = xs  # (B, c)
         xi = interp_fn(x, baseline, a, **mkw)  # (B, c, *F)
-        flat = xi.reshape((B * c,) + x.shape[1:])
+        flat = xi.reshape((B * c,) + feat)
         t = repeat_tree(target, c)
-        g = grad_f(flat, t).reshape((B, c) + x.shape[1:])
+        g = grad_f(flat, t).reshape((B, c) + feat)
         return accum_fn(acc, g, w, diff=diff, **mkw), None
+
+    def step_fused_linear(acc, xs):
+        # grad-linear accumulators (riemann class): Σ_k w_k g_k for the whole
+        # chunk is the cotangent of a (B, *F) carry broadcast over the step
+        # axis — one VJP output, no (B, c, *F) gradient batch, interpolants
+        # generated inside the differentiated program (DESIGN.md §10).
+        a, w = xs  # (B, c)
+
+        def chunk_sum(u):
+            xi = interp_add_fn(x, baseline, a, u, **mkw)  # (B, c, *F)
+            t = repeat_tree(target, c)
+            vals = f(xi.reshape((B * c,) + feat), t).astype(jnp.float32)
+            return jnp.sum(vals * w.astype(jnp.float32).reshape(-1))
+
+        inc = jax.grad(chunk_sum)(jnp.zeros_like(x, dtype=jnp.float32))
+        if mask is not None:  # match the unfused accumulators' masked grads
+            inc = inc * expand_mask(mask, inc.ndim)
+        return acc + inc, None
+
+    def step_fused(acc, xs):
+        # quadratic accumulators (idgi): per-step gradients are irreducible
+        # (⟨g,g⟩, Σ c_k g_k²), but the interpolation still composes into the
+        # differentiated program — grads arrive as the cotangent of a
+        # per-step additive carry, never of a materialized interpolant input.
+        a, w = xs
+
+        def chunk_vals(z):
+            xi = interp_add_fn(x, baseline, a, z, **mkw)
+            t = repeat_tree(target, c)
+            return f(xi.reshape((B * c,) + feat), t).sum()
+
+        g = jax.grad(chunk_vals)(jnp.zeros((B, c) + feat, jnp.float32))
+        return accum_fn(acc, g, w, diff=diff, **mkw), None
+
+    if fused:
+        step = step_fused_linear if spec.grad_linear else step_fused
 
     if state is None:
         acc0 = jnp.zeros_like(x, dtype=jnp.float32)

@@ -174,6 +174,15 @@ class MethodSpec:
     turns the method into an expectation over a path ensemble; the per-row
     computation is then EXACTLY the riemann method, and reduction (mean over
     each example's contiguous sample rows) happens after stage 2.
+
+    ``grad_linear`` declares the accumulator LINEAR in the per-step
+    gradients (riemann: acc += Σ w_k g_k). The fused stage 2
+    (``ig.attribute(fused=True)``, DESIGN.md §10) exploits it: the whole
+    chunk's weighted gradient sum is one (B, *F) VJP cotangent — the
+    per-step (B, chunk, *F) gradient batch never exists. Quadratic
+    accumulators (idgi: Σ c_k g_k² with c_k itself ⟨g,·⟩-dependent) must
+    keep per-step gradients; they set ``grad_linear=False`` and the fused
+    path only composes the interpolation into the differentiated program.
     """
 
     name: str
@@ -183,6 +192,7 @@ class MethodSpec:
     expand: Optional[Callable] = None
     n_samples: int = 1
     sigma_default: float = 0.1
+    grad_linear: bool = True  # accumulator linear in per-step grads (§10)
     description: str = ""
 
     def row_spec(self) -> "MethodSpec":
@@ -199,7 +209,7 @@ METHODS: dict[str, MethodSpec] = {
         description="vanilla integrated gradients (weighted Riemann sum)",
     ),
     "idgi": MethodSpec(
-        "idgi", "idgi", idgi_accum, idgi_finalize,
+        "idgi", "idgi", idgi_accum, idgi_finalize, grad_linear=False,
         description="IDGI: per-step f-difference split along the gradient direction",
     ),
     "noise_tunnel": MethodSpec(

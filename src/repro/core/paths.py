@@ -47,6 +47,42 @@ def interpolate(
     return (be + a.astype(x.dtype) * (xe - be)).astype(x.dtype)
 
 
+def interp_add(
+    x: jax.Array,
+    baseline: jax.Array,
+    alphas: jax.Array,
+    carry: jax.Array,
+    *,
+    mask: jax.Array = None,
+) -> jax.Array:
+    """Interpolants plus an additive f32 carry — the fused-stage-2 unit.
+
+    x, baseline: (B, *F); alphas: (K,) or (B, K); carry: (B, *F) f32
+    (broadcast over the step axis) or (B, K, *F) f32 (per-step). Returns
+    (B, K, *F) in ``x.dtype``.
+
+    This is the function the fused stage 2 (``ig.attribute(fused=True)``,
+    DESIGN.md §10) differentiates w.r.t. ``carry`` at zero: the interpolant
+    batch is then generated INSIDE the differentiated chunk program (never a
+    VJP-boundary input that must be materialized in HBM), and the transpose
+    of the broadcast-add IS the weighted gradient accumulation.
+
+    Dtype contract: the interpolants come from ``interpolate`` at INPUT
+    precision — at ``carry == 0`` the output is bit-identical to the unfused
+    path's interpolants (an x.dtype→f32→x.dtype round trip is exact), so
+    fused and unfused stage 2 evaluate the model at the same quadrature
+    nodes even under bf16. The carry add is lifted to f32, so the carry
+    cotangent — the accumulator increment — reduces over the step axis in
+    f32 regardless of the model dtype (same precision as the unfused f32
+    accumulators). Pallas drop-in: the custom-VJP op in
+    ``repro.kernels.interp_accum.ops``.
+    """
+    xi = interpolate(x, baseline, alphas, mask=mask).astype(jnp.float32)
+    if carry.ndim == x.ndim:  # (B, *F): broadcast over the step axis
+        carry = carry[:, None]
+    return (xi + carry).astype(x.dtype)
+
+
 def at_alpha(x: jax.Array, baseline: jax.Array, alpha: jax.Array) -> jax.Array:
     """Single path point; alpha: () or (B,)."""
     a = alpha.reshape((-1,) + (1,) * (x.ndim - 1)) if alpha.ndim else alpha

@@ -1,11 +1,20 @@
 """Pallas TPU kernels for the perf-critical hot spots.
 
 Each kernel ships as kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
-wrapper) and ref.py (pure-jnp oracle). On this CPU container kernels run with
-interpret=True; on TPU set interpret=False.
+wrapper) and ref.py (pure-jnp oracle). The ops resolve ``interpret=None``
+per call via ``kernels.common.default_interpret`` — interpreted on CPU,
+compiled on GPU/TPU — overridable per call.
 """
+from repro.kernels.common import default_interpret
 from repro.kernels.interpolate.ops import interpolate
+from repro.kernels.interp_accum.ops import interp_accum
 from repro.kernels.ig_accum.ops import ig_accum
 from repro.kernels.flash_attention.ops import flash_attention
 
-__all__ = ["interpolate", "ig_accum", "flash_attention"]
+__all__ = [
+    "default_interpret",
+    "interpolate",
+    "interp_accum",
+    "ig_accum",
+    "flash_attention",
+]

@@ -1,0 +1,26 @@
+"""Shared kernel-op plumbing: backend-resolved interpret mode."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def default_interpret(interpret: Optional[bool] = None) -> bool:
+    """Resolve a Pallas ``interpret`` override against the active backend.
+
+    ``None`` (the ops' default) means "interpret exactly when the backend
+    cannot compile Pallas" — i.e. the CPU test/dev container runs interpreted
+    while GPU/TPU runs actually hit the hardware. Passing an explicit bool
+    always wins (kernel-parity tests force ``True``; a TPU debug session can
+    force ``True`` too).
+
+        >>> default_interpret(False)
+        False
+        >>> import jax
+        >>> default_interpret() == (jax.default_backend() == "cpu")
+        True
+    """
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() == "cpu"

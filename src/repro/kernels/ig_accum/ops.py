@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.common import default_interpret
 from repro.kernels.ig_accum.kernel import (
     idgi_dots_pallas,
     ig_accum_pallas,
@@ -39,7 +40,7 @@ def ig_accum(
     mask: Optional[jax.Array] = None,
     block_k: int = 8,
     block_f: int = 512,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Engine-compatible drop-in for the riemann accumulator.
 
@@ -47,7 +48,10 @@ def ig_accum(
     diff: accepted for signature uniformity (riemann ignores the direction).
     mask: optional (B, *L) real-position mask — padded-position gradients
     are zeroed before accumulation (bucketed serving; DESIGN.md §6).
+    ``interpret=None`` resolves from the backend (interpreted on CPU,
+    compiled on GPU/TPU; ``kernels.common.default_interpret``).
     """
+    interpret = default_interpret(interpret)
     if mask is not None:
         grads = _mask_grads(grads, mask)
     B = acc.shape[0]
@@ -79,15 +83,17 @@ def ig_accum_idgi(
     mask: Optional[jax.Array] = None,
     block_k: int = 8,
     block_f: int = 512,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Engine-compatible drop-in for the IDGI accumulator (two fused passes).
 
     acc: (B, *F) f32; grads: (B, K, *F); weights: (B, K); diff: (B, *F)
     -> (B, *F) f32 = acc + Σ_k w_k ⟨g_k, diff⟩/⟨g_k, g_k⟩ · g_k².
     Zero-padding K/F is safe: padded features contribute 0 to both inner
-    products and padded steps get coefficient w=0.
+    products and padded steps get coefficient w=0. ``interpret=None``
+    resolves from the backend (``kernels.common.default_interpret``).
     """
+    interpret = default_interpret(interpret)
     if mask is not None:
         grads = _mask_grads(grads, mask)
     B = acc.shape[0]

@@ -1,0 +1,128 @@
+"""Differentiable fused interp-plus-carry op — the fused stage 2's kernel unit.
+
+``interp_accum`` is the Pallas drop-in for ``repro.core.paths.interp_add``
+(the function ``ig.attribute(fused=True)`` differentiates w.r.t. its carry,
+DESIGN.md §10), with a custom VJP:
+
+  forward   one fused Pallas pass b + α(x − x′) + carry (kernel.py);
+  backward  carry rank 2 (riemann class, carry broadcast over steps):
+            ``accum_cot_pallas`` — the one-pass K-reduction with the f32
+            output tile carried in VMEM; carry rank 3 (IDGI class, per-step
+            probe): an f32 cast of the cotangent, no kernel.
+
+The op is differentiable W.R.T. THE CARRY ONLY: the endpoint/alpha cotangents
+are declared zero, because the fused stage 2 treats (x, x′, α) as constants
+of the chunk program. Use the pure-jnp ``paths.interp_add`` where full AD
+through the endpoints is needed.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.paths import mask_to_baseline
+from repro.kernels.common import default_interpret
+from repro.kernels.interp_accum.kernel import accum_cot_pallas, interp_add_pallas
+from repro.kernels.interp_accum.ref import accum_cot_ref, interp_add_ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def _interp_add_flat(x, baseline, alphas, carry, block_k, block_f, interpret):
+    """Flat padded core: x/baseline (B, F), alphas (B, K), carry (B, F) or
+    (B, K, F) f32 -> (B, K, F) x.dtype."""
+    return interp_add_pallas(
+        x, baseline, alphas, carry,
+        block_k=block_k, block_f=block_f, interpret=interpret,
+    )
+
+
+def _interp_add_flat_fwd(x, baseline, alphas, carry, block_k, block_f, interpret):
+    out = _interp_add_flat(x, baseline, alphas, carry, block_k, block_f, interpret)
+    # dtype-only residuals (rank-0 zeros): the backward needs no primal
+    # values, only the cotangent dtypes for the declared-zero endpoints and
+    # the carry rank for transpose dispatch
+    res = (
+        jnp.zeros((), x.dtype),
+        jnp.zeros((), baseline.dtype),
+        jnp.zeros((), alphas.dtype),
+        carry.ndim == 2,
+    )
+    return out, res
+
+
+def _interp_add_flat_bwd(block_k, block_f, interpret, res, g):
+    zx, zb, za, bcast = res
+    B, K, F = g.shape
+    if bcast:  # riemann class: transpose of the step broadcast = fused K-sum
+        ubar = accum_cot_pallas(g, block_k=block_k, block_f=block_f, interpret=interpret)
+    else:  # IDGI class: identity transpose, f32 cast only
+        ubar = g.astype(jnp.float32)
+    return (
+        jnp.zeros((B, F), zx.dtype),
+        jnp.zeros((B, F), zb.dtype),
+        jnp.zeros((B, K), za.dtype),
+        ubar,
+    )
+
+
+_interp_add_flat.defvjp(_interp_add_flat_fwd, _interp_add_flat_bwd)
+
+
+def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def interp_accum(
+    x: jax.Array,
+    baseline: jax.Array,
+    alphas: jax.Array,
+    carry: jax.Array,
+    *,
+    mask: Optional[jax.Array] = None,
+    block_k: int = 8,
+    block_f: int = 512,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Engine-compatible drop-in for ``repro.core.paths.interp_add``.
+
+    x, baseline: (B, *F); alphas: (K,) or (B, K); carry: (B, *F) f32
+    (broadcast over steps — riemann class) or (B, K, *F) f32 (per-step —
+    IDGI class). Returns (B, K, *F) in ``x.dtype``. mask: optional (B, *L)
+    real-position mask — masked positions are pinned to the baseline before
+    the kernel runs (DESIGN.md §6). ``interpret=None`` resolves from the
+    backend (``kernels.common.default_interpret``).
+    """
+    interpret = default_interpret(interpret)
+    x = mask_to_baseline(x, baseline, mask)
+    B = x.shape[0]
+    feat = x.shape[1:]
+    F = int(np.prod(feat))
+    if alphas.ndim == 1:
+        alphas = jnp.broadcast_to(alphas, (B,) + alphas.shape)
+    K = alphas.shape[1]
+    xf = _pad_to(x.reshape(B, F), block_f, 1)
+    bf = _pad_to(baseline.reshape(B, F), block_f, 1)
+    af = _pad_to(alphas.astype(jnp.float32), block_k, 1)
+    bcast = carry.ndim == x.ndim
+    cf = carry.astype(jnp.float32)
+    if bcast:
+        cf = _pad_to(cf.reshape(B, F), block_f, 1)
+    else:
+        cf = _pad_to(_pad_to(cf.reshape(B, K, F), block_f, 2), block_k, 1)
+    bk = min(block_k, af.shape[1])
+    blf = min(block_f, xf.shape[1])
+    out = _interp_add_flat(xf, bf, af, cf, bk, blf, interpret)
+    return out[:, :K, :F].reshape((B, K) + feat)
+
+
+__all__ = ["interp_accum", "interp_add_ref", "accum_cot_ref"]

@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for the fused interp-into-VJP kernels (DESIGN.md §10)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def interp_add_ref(
+    x: jax.Array, baseline: jax.Array, alphas: jax.Array, carry: jax.Array
+) -> jax.Array:
+    """x, baseline: (B, F); alphas: (B, K); carry: (B, F) or (B, K, F) f32.
+
+    out[b, k, f] = baseline[b, f] + alphas[b, k]·(x − baseline)[b, f]
+                   + carry[b, (k,) f]
+
+    Interpolation at INPUT precision then the carry add lifted to f32 — the
+    §10 dtype contract (at carry == 0 the quadrature nodes are bit-identical
+    to the unfused path's, bf16 included), mirroring kernel.py's ``_interp``.
+    """
+    a = alphas.astype(x.dtype)[:, :, None]
+    xi = (baseline[:, None, :] + a * (x - baseline)[:, None, :]).astype(jnp.float32)
+    u = carry[:, None, :] if carry.ndim == 2 else carry
+    return (xi + u).astype(x.dtype)
+
+
+def accum_cot_ref(grads: jax.Array) -> jax.Array:
+    """grads (B, K, F) -> (B, F) f32 = Σ_k grads[:, k] (f32 reduction)."""
+    return jnp.sum(grads.astype(jnp.float32), axis=1)

@@ -8,6 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.paths import mask_to_baseline
+from repro.kernels.common import default_interpret
 from repro.kernels.interpolate.kernel import interpolate_pallas
 from repro.kernels.interpolate.ref import interpolate_ref
 
@@ -30,7 +31,7 @@ def interpolate(
     mask: jax.Array = None,
     block_k: int = 8,
     block_f: int = 512,
-    interpret: bool = True,
+    interpret: bool = None,
 ) -> jax.Array:
     """Engine-compatible drop-in for ``repro.core.paths.interpolate``.
 
@@ -38,7 +39,10 @@ def interpolate(
     mask: optional (B, *L) real-position mask — masked positions are pinned
     to the baseline before the kernel runs, so padded features interpolate
     to exactly the baseline (bucketed serving; DESIGN.md §6).
+    ``interpret=None`` resolves from the backend (interpreted on CPU,
+    compiled on GPU/TPU; ``kernels.common.default_interpret``).
     """
+    interpret = default_interpret(interpret)
     x = mask_to_baseline(x, baseline, mask)
     B = x.shape[0]
     feat = x.shape[1:]

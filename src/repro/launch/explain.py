@@ -75,7 +75,8 @@ def report(engine: ExplainEngine) -> None:
         print(
             f"  bucket B={shape[0]:<3d} S={shape[1]:<5d} calls={b.calls:<3d} "
             f"reqs={b.requests:<4d} compile={b.compile_s:.2f}s "
-            f"mean_latency={1e3 * b.mean_latency_s:.1f}ms"
+            f"mean_latency={1e3 * b.mean_latency_s:.1f}ms "
+            f"bytes={b.bytes_accessed:.2e} peak={b.peak_bytes:.2e}"
         )
     for shape in sorted(st.hop_buckets):
         b = st.hop_buckets[shape]
@@ -132,6 +133,18 @@ def main() -> int:
         help="ensemble perturbation scale (0 = method default)",
     )
     ap.add_argument(
+        "--fused", action="store_true",
+        help="fused stage 2: interpolation composed into the VJP (DESIGN.md §10)",
+    )
+    ap.add_argument(
+        "--use-kernels", action="store_true",
+        help="inject the Pallas kernel set (interpret-mode on CPU)",
+    )
+    ap.add_argument(
+        "--autotune", action="store_true",
+        help="load per-(bucket, device) tuned configs from results/autotune_<device>.json",
+    )
+    ap.add_argument(
         "--mesh", default="",
         help="'dp,tp' device mesh for sharded serving (e.g. 4,1); empty = single-device",
     )
@@ -173,10 +186,15 @@ def main() -> int:
             m_max=args.m_max,
             n_samples=args.n_samples,
             sigma=args.sigma,
+            fused=args.fused,
+            use_kernels=args.use_kernels,
+            autotune=args.autotune,
         )
         mode = f"adaptive tol={args.tol} ladder={engine.m_ladder}" if args.adaptive else f"m={args.m}"
         samples = f" samples={engine.n_samples}" if engine.n_samples > 1 else ""
-        print(f"method={args.method} schedule={sched_name} {mode}{samples} "
+        flags = (" fused" if args.fused else "") + (" kernels" if args.use_kernels else "") \
+            + (" autotuned" if args.autotune else "")
+        print(f"method={args.method} schedule={sched_name} {mode}{samples}{flags} "
               f"traffic={args.rounds}x{args.requests} reqs S∈[{args.min_seq},{args.max_seq}]")
         for rnd in range(args.rounds):
             reqs = make_traffic(cfg, args.requests, args.min_seq, args.max_seq, rng)

@@ -3,6 +3,8 @@ from repro.roofline.analyze import (
     Hardware,
     RooflineReport,
     cost_analysis_dict,
+    hardware_for,
+    hotpath_terms,
     parse_collective_bytes,
     roofline_report,
     model_flops,
@@ -13,6 +15,8 @@ __all__ = [
     "Hardware",
     "RooflineReport",
     "cost_analysis_dict",
+    "hardware_for",
+    "hotpath_terms",
     "parse_collective_bytes",
     "roofline_report",
     "model_flops",

@@ -39,6 +39,71 @@ HW_V5E = Hardware(
     name="tpu_v5e", peak_flops=197e12, hbm_bw=819e9, link_bw=50e9, hbm_bytes=16e9
 )
 
+# Serving-host hardware models beyond the paper's v5e target. The numbers
+# are deliberately round generic-class figures — the autotuner
+# (repro.serve.autotune) only uses them to RANK candidate configs by their
+# roofline terms before the measured sweep, so class-accurate ratios matter,
+# absolute calibration does not.
+HW_GENERIC_GPU = Hardware(
+    name="generic_gpu", peak_flops=300e12, hbm_bw=2000e9, link_bw=300e9,
+    hbm_bytes=80e9,
+)
+HW_CPU_HOST = Hardware(
+    name="cpu_host", peak_flops=2e12, hbm_bw=100e9, link_bw=25e9,
+    hbm_bytes=64e9,
+)
+
+# substring match (lowercased device_kind) -> hardware model; first hit wins
+HW_BY_KIND: tuple[tuple[str, Hardware], ...] = (
+    ("tpu v5 lite", HW_V5E),
+    ("tpu", HW_V5E),
+    ("cpu", HW_CPU_HOST),
+    ("gpu", HW_GENERIC_GPU),
+    ("cuda", HW_GENERIC_GPU),
+    ("nvidia", HW_GENERIC_GPU),
+)
+
+
+def hardware_for(device_kind: str) -> Hardware:
+    """Resolve a ``jax.Device.device_kind`` string to a hardware model.
+
+    Unknown kinds fall back to the GPU-class model (an accelerator we have
+    no table entry for is more accelerator-like than CPU-like).
+
+        >>> hardware_for("cpu").name
+        'cpu_host'
+        >>> hardware_for("TPU v5 lite").name
+        'tpu_v5e'
+    """
+    kind = device_kind.lower()
+    for sub, hw in HW_BY_KIND:
+        if sub in kind:
+            return hw
+    return HW_GENERIC_GPU
+
+
+def hotpath_terms(cost: dict, hw: Hardware) -> dict:
+    """Roofline terms for one stage-2 executable's ``cost_analysis`` dict.
+
+    Returns ``{bytes_accessed, flops, memory_s, compute_s, bound_s,
+    dominant}`` — the per-bucket budget the serving-path autotuner ranks
+    candidate (chunk, block) configs with (DESIGN.md §10): ``bound_s`` is
+    the roofline step-time estimate max(memory_s, compute_s), ``dominant``
+    names the binding term.
+    """
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    flops = float(cost.get("flops", 0.0))
+    memory_s = nbytes / hw.hbm_bw
+    compute_s = flops / hw.peak_flops
+    return {
+        "bytes_accessed": nbytes,
+        "flops": flops,
+        "memory_s": memory_s,
+        "compute_s": compute_s,
+        "bound_s": max(memory_s, compute_s),
+        "dominant": "memory" if memory_s >= compute_s else "compute",
+    }
+
 _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
     "s16": 2, "u16": 2, "f16": 2, "bf16": 2,

@@ -2,6 +2,13 @@ from repro.serve.engine import ServeEngine, make_serve_step, make_prefill_step
 from repro.serve.explain_engine import EngineStats, ExplainEngine, ExplainRequest
 from repro.serve.explain_service import ExplainService
 from repro.serve.batching import BucketBatch, bucket_for, plan_buckets, pow2_ladder
+from repro.serve.autotune import (
+    AutotuneCache,
+    HotpathConfig,
+    autotune_engine,
+    bucket_key,
+    chunk_candidates,
+)
 
 __all__ = [
     "ServeEngine",
@@ -15,4 +22,9 @@ __all__ = [
     "bucket_for",
     "plan_buckets",
     "pow2_ladder",
+    "AutotuneCache",
+    "HotpathConfig",
+    "autotune_engine",
+    "bucket_key",
+    "chunk_candidates",
 ]

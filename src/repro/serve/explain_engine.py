@@ -36,6 +36,18 @@ hot compiled program. This engine makes that true under real traffic:
     compile step without a dp-divisible batch serves replicated and is
     counted in ``EngineStats.mesh_fallbacks`` — never silently.
 
+**Hot-path bandwidth** (DESIGN.md §10): with ``fused=True`` stage 2 composes
+interpolation with the model forward under one VJP
+(``ig.attribute(fused=True)``), so the (B·chunk, *F) interpolant batch never
+crosses a program boundary and riemann-class methods collapse the per-step
+gradient batch into one (B, *F) cotangent. Hop executables donate their
+``IGState`` (ladder escalation reuses the f32 accumulator buffer in place),
+``autotune=True`` loads per-(bucket, device) tuned (chunk, block_k, block_f)
+configs from ``serve.autotune``'s on-disk cache, ``use_kernels=True``
+injects the Pallas kernel set at those block sizes, and every compile
+records its ``cost_analysis`` bytes-accessed / peak-bytes budget on the
+bucket's stats row.
+
 **Adaptive iso-convergence** (``adaptive=True``, DESIGN.md §7): ``m`` becomes
 the base rung of a pow-2 m-ladder instead of a fixed budget. Each bucket runs
 rung 0 (probe + base schedule + resumable accumulation), then examples whose
@@ -51,9 +63,10 @@ recompiles at steady state, per-request shapes never exist.
 """
 from __future__ import annotations
 
+import functools
 import time
 import warnings
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Any, Optional, Sequence
 
 import jax
@@ -67,6 +80,8 @@ from repro.core.baselines import pad_embedding
 from repro.core.probes import probe_cost
 from repro.core.schedule import Schedule, family, m_ladder
 from repro.models.registry import Model
+from repro.roofline import cost_analysis_dict
+from repro.serve.autotune import AutotuneCache, HotpathConfig, bucket_key
 from repro.sharding import (
     DEFAULT_RULES,
     MeshRules,
@@ -96,6 +111,13 @@ class BucketStats:
     requests: int = 0
     compile_s: float = 0.0
     total_s: float = 0.0  # wall time of cached calls (excludes compiles)
+    # roofline-facing compile-time budgets (DESIGN.md §10): HBM traffic and
+    # peak live bytes of the LAST executable compiled at this bucket shape,
+    # from compiled.cost_analysis()/memory_analysis() — what the autotuner
+    # ranks candidate configs by, surfaced per bucket so regressions are
+    # observable in serving stats, not just in benchmarks
+    bytes_accessed: float = 0.0
+    peak_bytes: float = 0.0
 
     @property
     def mean_latency_s(self) -> float:
@@ -169,6 +191,10 @@ class ExplainEngine:
             (batch × step) stage-2 axis across the mesh's data axes
             (DESIGN.md §9).
         adaptive / tol / m_max: δ-feedback serving up the pow-2 m-ladder.
+        fused: fused stage 2 (DESIGN.md §10); the default False is the
+            materializing oracle path (the BENCH_hotpath reference).
+        use_kernels / autotune / autotune_dir: Pallas kernel injection and
+            the per-(bucket, device) tuned-config cache (§10).
 
     Example (tiny CPU-reduced LM, one mixed-length round):
 
@@ -211,6 +237,10 @@ class ExplainEngine:
         n_samples: int = 0,
         sigma: float = 0.0,
         sample_seed: int = 0,
+        fused: bool = False,
+        use_kernels: bool = False,
+        autotune: bool = False,
+        autotune_dir: str = "results",
     ):
         self.cfg = cfg
         self.params = params
@@ -221,6 +251,20 @@ class ExplainEngine:
         self.n_int = n_int
         self.chunk = chunk
         self.pad_id = pad_id
+        # fused stage 2 (DESIGN.md §10): bandwidth-optimal, opt-in — fused
+        # and unfused agree to float tolerance but not bitwise, and under
+        # bf16 the w-seeded backward rounds cotangents at a different scale
+        # (≲0.5% relative), so flipping the serving default is gated on the
+        # BENCH_hotpath trace/bytes/latency evidence, not assumed
+        self.fused = fused
+        self.use_kernels = use_kernels
+        # per-(bucket, device) tuned (chunk, block_k, block_f) configs from
+        # serve.autotune — loaded once at construction; a missing cache file
+        # is an empty cache (every bucket falls back to the engine-wide
+        # chunk and the default Pallas blocks)
+        self._autotune_cache = (
+            AutotuneCache.load(autotune_dir) if autotune else None
+        )
         self.seq_buckets = tuple(seq_buckets)
         self.batch_buckets = tuple(batch_buckets) if batch_buckets else None
         self.max_batch = max_batch
@@ -258,20 +302,70 @@ class ExplainEngine:
             chunk=chunk,
             refine_rounds=refine_rounds,
             power=power,
+            fused=fused,
+            **self._kernel_kwargs(HotpathConfig(chunk)),
         )
 
     # -- compiled-executable cache ----------------------------------------
+
+    def _kernel_kwargs(self, cfg: HotpathConfig) -> dict:
+        """Pallas injection kwargs for one tuned config (``use_kernels``).
+
+        Fused mode injects the custom-VJP interp-plus-carry op (its backward
+        is the fused accumulation kernel, DESIGN.md §10) plus the class
+        accumulator for quadratic methods; unfused mode injects the classic
+        interpolate + accumulate pair."""
+        if not self.use_kernels:
+            return {}
+        from repro.kernels.ig_accum.ops import accum_fn_for
+        from repro.kernels.interp_accum.ops import interp_accum
+        from repro.kernels.interpolate.ops import interpolate as interpolate_op
+
+        blocks = {"block_k": cfg.block_k, "block_f": cfg.block_f}
+        kw = {"accum_fn": functools.partial(accum_fn_for(self._spec.accum), **blocks)}
+        if self.fused:
+            kw["interp_add_fn"] = functools.partial(interp_accum, **blocks)
+        else:
+            kw["interp_fn"] = functools.partial(interpolate_op, **blocks)
+        return kw
+
+    def _cfg_for(self, bucket: tuple[int, int]) -> HotpathConfig:
+        """The bucket's tuned (chunk, block_k, block_f), or the engine-wide
+        defaults when no autotune entry exists (DESIGN.md §10)."""
+        if self._autotune_cache is not None:
+            tuned = self._autotune_cache.config_for(
+                bucket_key(bucket, self._spec.accum, self.schedule, self.m,
+                           self.n_int, self.fused)
+            )
+            if tuned is not None:
+                return tuned
+        return HotpathConfig(self.chunk)
+
+    def _explainer_at(self, cfg: HotpathConfig) -> Explainer:
+        return replace(
+            self._explainer, chunk=cfg.chunk, **self._kernel_kwargs(cfg)
+        )
+
+    def _attr_fn_at(self, cfg: HotpathConfig):
+        """Fixed-m bucket unit at one tuned config (also the autotuner's
+        candidate-compile hook)."""
+        exp = self._explainer_at(cfg)
+
+        def attr_fn(embeds, baseline, aux, mask):
+            return exp.attribute(embeds, baseline, aux, mask=mask)
+
+        return attr_fn
 
     def _key(self, bucket: tuple[int, int]) -> tuple:
         # keyed by accumulator CLASS, not method name: methods sharing an
         # accumulator share the warmed executables (DESIGN.md §8); the mesh
         # axis sizes ride every key so sharded and single-device entries
-        # coexist (DESIGN.md §9)
+        # coexist (DESIGN.md §9); the resolved per-bucket HotpathConfig and
+        # the fused/use_kernels program choices ride it too (§10), so tuned
+        # and untuned entries never alias
         return (bucket, self._spec.accum, self.schedule, self.m, self.n_int,
-                self.chunk, self._mesh_key)
-
-    def _attr_fn(self, embeds, baseline, aux, mask):
-        return self._explainer.attribute(embeds, baseline, aux, mask=mask)
+                self._cfg_for(bucket), self.fused, self.use_kernels,
+                self._mesh_key)
 
     def _start_fn(self, embeds, baseline, aux, mask):
         """Adaptive rung 0: fused probe + base schedule + resumable stage 2.
@@ -294,7 +388,9 @@ class ExplainEngine:
             embeds, baseline, aux, new_nodes, state, mask=mask
         )
 
-    def _executable(self, key: tuple, bs: BucketStats, fn, args: tuple) -> Any:
+    def _executable(
+        self, key: tuple, bs: BucketStats, fn, args: tuple, donate: tuple = ()
+    ) -> Any:
         """AOT-compiled program (+ its input shardings) for one cache key.
 
         ``bs`` is the stats row (plan bucket or hop bucket) that the compile
@@ -307,6 +403,13 @@ class ExplainEngine:
         bumps ``EngineStats.mesh_fallbacks``. Returns ``(compiled,
         shardings)`` — callers feed the pair to ``_timed_call`` so inputs are
         placed onto the mesh before the call.
+
+        ``donate`` (``donate_argnums``) marks args whose buffers the
+        executable may overwrite — hop executables donate their ``IGState``
+        so ladder escalation reuses the (B, *F) f32 accumulator in place
+        instead of copying it each rung (DESIGN.md §10; every donated arg is
+        constructed fresh per call, never read back after). Compile-time
+        roofline budgets (bytes accessed, peak bytes) are recorded on ``bs``.
         """
         hit = key in self._cache
         if hit:
@@ -329,8 +432,28 @@ class ExplainEngine:
                     stacklevel=2,
                 )
         sds = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), args)
-        compiled = jax.jit(fn, **jit_kw).lower(*sds).compile()
+        with warnings.catch_warnings():
+            # CPU cannot honor donation; the aliasing request is still
+            # correct on every backend and must not spam serving logs
+            warnings.filterwarnings(
+                "ignore", message=".*donated buffers were not usable.*"
+            )
+            compiled = (
+                jax.jit(fn, donate_argnums=donate, **jit_kw).lower(*sds).compile()
+            )
         bs.compile_s += time.perf_counter() - t0
+        bs.bytes_accessed = float(
+            cost_analysis_dict(compiled).get("bytes accessed", 0.0)
+        )
+        try:
+            ma = compiled.memory_analysis()
+            bs.peak_bytes = float(
+                ma.argument_size_in_bytes
+                + ma.output_size_in_bytes
+                + ma.temp_size_in_bytes
+            )
+        except Exception:  # noqa: BLE001 — backend-optional introspection
+            pass
         self._cache[key] = (compiled, shardings)
         return self._cache[key]
 
@@ -385,7 +508,10 @@ class ExplainEngine:
     def _run_bucket(self, bb: BucketBatch) -> Any:
         args = self._bucket_inputs(bb)
         bs = self.stats.bucket(bb.bucket)
-        ex = self._executable(self._key(bb.bucket), bs, self._attr_fn, args)
+        ex = self._executable(
+            self._key(bb.bucket), bs,
+            self._attr_fn_at(self._cfg_for(bb.bucket)), args,
+        )
         res = self._timed_call(bs, ex, args)
         bs.requests += len(bb.indices)
         return res
@@ -417,7 +543,7 @@ class ExplainEngine:
         chunk = self._explainer.adaptive_chunk
         args = self._bucket_inputs(bb)
         key = ("start", bb.bucket, self._spec.accum, self.schedule, self.m,
-               self.n_int, chunk, self._mesh_key)
+               self.n_int, chunk, self.fused, self.use_kernels, self._mesh_key)
         bs = self.stats.bucket(bb.bucket)
         ex = self._executable(key, bs, self._start_fn, args)
         res, state, sched = self._timed_call(bs, ex, args)
@@ -475,9 +601,14 @@ class ExplainEngine:
                 ig.IGState(acc_act[pad_sel], f_x[rows], f_b[rows]),
             )
             hop_key = ("hop", hop_bucket, self._spec.accum, n_new, chunk,
-                       self._mesh_key)
+                       self.fused, self.use_kernels, self._mesh_key)
             hbs = self.stats.hop_bucket(hop_bucket)
-            hop = self._executable(hop_key, hbs, self._hop_fn, hop_args)
+            # the IGState (arg 5) is donated: escalation reuses the (B, *F)
+            # f32 accumulator buffer in place instead of copying each rung
+            # (DESIGN.md §10); it is rebuilt fresh per hop and never read
+            # back after the call, so donation is always safe here
+            hop = self._executable(hop_key, hbs, self._hop_fn, hop_args,
+                                   donate=(5,))
             res2, st2 = self._timed_call(hbs, hop, hop_args)
             ast.hop_calls += 1
             ast.launched_steps += B2 * n_new

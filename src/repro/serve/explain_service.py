@@ -39,6 +39,11 @@ class ExplainService:
     # path-ensemble methods (0/0.0 = the method's registered defaults)
     n_samples: int = 0
     sigma: float = 0.0
+    # fused stage 2, Pallas kernel injection, and per-(bucket, device)
+    # tuned configs (DESIGN.md §10)
+    fused: bool = False
+    use_kernels: bool = False
+    autotune: bool = False
 
     def __post_init__(self):
         self._engine = ExplainEngine(
@@ -55,6 +60,9 @@ class ExplainService:
             m_max=self.m_max,
             n_samples=self.n_samples,
             sigma=self.sigma,
+            fused=self.fused,
+            use_kernels=self.use_kernels,
+            autotune=self.autotune,
         )
 
     @property

@@ -1,0 +1,280 @@
+"""Fused stage-2 hot path (DESIGN.md §10): parity, donation, autotune.
+
+What the bandwidth overhaul must NOT change, stated as tests:
+
+  (a) fused-vs-oracle parity — ``ig.attribute(fused=True)`` matches the
+      materializing path for every method × schedule family, under f32 AND
+      bf16, with ragged masks (fused differs only in program structure; at
+      bf16 the weight-seeded backward legitimately reorders rounding, so
+      the tolerance is dtype-scaled);
+  (b) the fused adaptive ladder stays BIT-identical to one fused fixed run
+      over the materialized refined schedule — through the DONATED hop
+      executables of ``attribute_adaptive`` (the §7 resume contract holds
+      unchanged when the state buffer is donated);
+  (c) the custom-VJP Pallas op ``kernels.interp_accum`` equals the
+      ``paths.interp_add`` oracle forward and backward, for both carry
+      ranks (riemann broadcast / IDGI per-step), with padding-forcing odd
+      shapes;
+  (d) an autotuned engine replays warmed traffic with ZERO steady-state
+      recompiles (the tuned chunk is part of the executable key, so the
+      closed-shape-set argument survives per-bucket configs) and records
+      per-bucket bytes-accessed budgets;
+  (e) ``interpret=None`` kernel-op defaults resolve from the backend.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ig, methods, schedule
+from repro.core.api import Explainer
+from repro.core.paths import interp_add
+from repro.core.schedule import Schedule
+
+KEY = jax.random.PRNGKey(0)
+ALL_METHODS = sorted(methods.METHODS)
+ALL_SCHEDULES = sorted(schedule.SCHEDULES)
+
+
+def _f(xs, t):
+    # nonlinear but cheap: quadrature error is real (exercises δ), grads are
+    # position-dependent (exercises direction-aware accumulators)
+    return jnp.sum(jnp.tanh(xs) + 0.25 * xs**2, axis=tuple(range(1, xs.ndim)))
+
+
+def _inputs(dtype, B=3, F=5):
+    x = jax.random.normal(KEY, (B, F)).astype(dtype)
+    baseline = jnp.zeros_like(x)
+    # ragged mask: rows with 3, 5 (all), 1 real positions
+    mask = jnp.array(
+        [[1, 1, 1, 0, 0], [1, 1, 1, 1, 1], [1, 0, 0, 0, 0]], jnp.float32
+    )
+    return x, baseline, mask
+
+
+# ------------------------------------------------ (a) fused-vs-oracle parity
+
+
+@pytest.mark.parametrize("method", ALL_METHODS)
+@pytest.mark.parametrize("sched_name", ALL_SCHEDULES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_matches_oracle(method, sched_name, dtype):
+    x, baseline, mask = _inputs(dtype)
+    kw = dict(method=method, schedule=sched_name, m=8, n_int=2, chunk=4,
+              n_samples=2, sigma=0.15)
+    ref = Explainer(_f, **kw).attribute(x, baseline, None, mask=mask)
+    got = Explainer(_f, fused=True, **kw).attribute(x, baseline, None, mask=mask)
+    # bf16 forwards round the weight-seeded cotangents at a different scale
+    # than the unit-seeded unfused backward — ≲1% relative is expected there,
+    # while f32 differs only by reduction order
+    tol = dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=1e-4, atol=1e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(got.attributions, np.float32),
+        np.asarray(ref.attributions, np.float32),
+        **tol,
+    )
+    np.testing.assert_allclose(
+        np.asarray(got.delta, np.float32), np.asarray(ref.delta, np.float32),
+        rtol=tol["rtol"], atol=tol["atol"],
+    )
+    # masked positions: exact zeros on BOTH paths
+    got_np = np.asarray(got.attributions, np.float32)
+    assert np.all(got_np[0, 3:] == 0.0) and np.all(got_np[2, 1:] == 0.0)
+
+
+# ------------------- (b) bit-identical fused resume through donated hops
+
+
+@pytest.mark.parametrize("method", ALL_METHODS)
+def test_fused_adaptive_resume_bit_identical(method):
+    """tol=0 forces every row up the whole ladder through the DONATED hop
+    executables; the result must equal one fused fixed run over the final
+    refined schedule bit-for-bit (§7 × §10)."""
+    x, baseline, mask = _inputs(jnp.float32)
+    ex = Explainer(_f, method=method, schedule="paper", m=4, n_int=2,
+                   fused=True, n_samples=2, sigma=0.15)
+    x2, b2, t2, m2, n = ex.expand_inputs(x, baseline, None, mask)
+    res, state, sched = ex.start(x2, b2, t2, mask=m2)
+    fam = schedule.family("paper")
+    refined = Schedule(
+        jnp.broadcast_to(sched.alphas, (x2.shape[0],) + sched.alphas.shape[-1:]),
+        jnp.broadcast_to(sched.weights, (x2.shape[0],) + sched.weights.shape[-1:]),
+    )
+    for _ in range(2):  # ladder 4 -> 8 -> 16
+        refined = fam.refine(refined)
+    fixed = ig.attribute(
+        _f, x2, b2, refined, t2, method=ex.spec, mask=m2,
+        chunk=ex.adaptive_chunk, fused=True,
+    )
+    fixed = ex.reduce_result(fixed, n)
+    adaptive, info = ex.attribute_adaptive(
+        x, baseline, None, tol=0.0, m_max=16, mask=mask
+    )
+    assert list(info["m_used"]) == [16] * x2.shape[0]
+    np.testing.assert_array_equal(
+        np.asarray(adaptive.attributions), np.asarray(fixed.attributions)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(adaptive.delta), np.asarray(fixed.delta)
+    )
+
+
+# --------------------------- (c) interp_accum kernel vs oracle, fwd and bwd
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("carry_rank", [2, 3])
+def test_interp_accum_kernel_parity(dtype, carry_rank):
+    from repro.kernels.interp_accum.ops import interp_accum
+
+    B, K, F = 3, 5, 7  # odd K/F force block padding
+    x = jax.random.normal(KEY, (B, F)).astype(dtype)
+    baseline = (0.1 * jax.random.normal(jax.random.PRNGKey(1), (B, F))).astype(dtype)
+    alphas = jax.random.uniform(jax.random.PRNGKey(2), (B, K))
+    mask = jnp.array([[1, 1, 1, 1, 0, 0, 0], [1] * 7, [1, 1, 0, 0, 0, 0, 0]],
+                     jnp.float32)
+    shape = (B, F) if carry_rank == 2 else (B, K, F)
+    carry = jax.random.normal(jax.random.PRNGKey(3), shape)
+    got = interp_accum(x, baseline, alphas, carry, mask=mask, block_k=4, block_f=4)
+    want = interp_add(x, baseline, alphas, carry, mask=mask)
+    assert got.dtype == want.dtype == dtype
+    # one output-dtype ulp OF THE OPERANDS: XLA may fold the intermediate
+    # downcast in one program and not the other, and the carry add can
+    # cancel — so bf16 gets an absolute band at ulp(max|operand|) ≈ 2^-8·2
+    rtol, atol = (1e-6, 1e-6) if dtype == jnp.float32 else (1e-2, 2e-2)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=rtol, atol=atol,
+    )
+    # the flat pure-jnp ref honors the same dtype contract as the oracle
+    # (interp at input precision, carry add in f32) — bitwise, bf16 included
+    from repro.kernels.interp_accum.ref import interp_add_ref
+
+    np.testing.assert_array_equal(
+        np.asarray(interp_add_ref(x, baseline, alphas, carry)),
+        np.asarray(interp_add(x, baseline, alphas, carry)),
+    )
+
+    # at carry == 0 the ORACLE reproduces the unfused interpolants BITWISE
+    # (the §10 dtype contract: same quadrature nodes fused and unfused); the
+    # kernel agrees to one-ulp (FMA contraction may differ per backend)
+    from repro.core.paths import interpolate
+
+    z = jnp.zeros(shape, jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(interp_add(x, baseline, alphas, z, mask=mask)),
+        np.asarray(interpolate(x, baseline, alphas, mask=mask)),
+    )
+    np.testing.assert_allclose(
+        np.asarray(interp_accum(x, baseline, alphas, z, mask=mask,
+                                block_k=4, block_f=4), np.float32),
+        np.asarray(interpolate(x, baseline, alphas, mask=mask), np.float32),
+        rtol=1e-6, atol=0,
+    )
+
+    # backward: the fused accumulation (weights ride the seed)
+    w = jax.random.uniform(jax.random.PRNGKey(4), (B, K))
+
+    def loss(fn):
+        def go(u):
+            xi = fn(x, baseline, alphas, u, mask=mask)
+            vals = jnp.sum(xi.astype(jnp.float32) ** 2, axis=-1)  # (B, K)
+            return jnp.sum(vals * w)
+        return go
+
+    u0 = carry.astype(jnp.float32)
+    gk = jax.grad(loss(lambda *a, **k: interp_accum(*a, block_k=4, block_f=4, **k)))(u0)
+    go_ = jax.grad(loss(interp_add))(u0)
+    assert gk.dtype == jnp.float32
+    # the backward inherits the forward's dtype-ulp band (xi feeds the grad)
+    np.testing.assert_allclose(np.asarray(gk), np.asarray(go_), rtol=rtol, atol=atol)
+
+
+# ----------------------------- (d) autotuned engine: zero recompiles, stats
+
+
+@pytest.fixture(scope="module")
+def lm_f32():
+    from repro.configs import ARCHS, reduced
+    from repro.models.registry import Model
+
+    cfg = dataclasses.replace(reduced(ARCHS["llama3-8b"]), compute_dtype="float32")
+    model = Model(cfg)
+    return cfg, model, model.init(KEY)
+
+
+def _requests(cfg, lens, seed=0):
+    from repro.serve import ExplainRequest
+
+    rng = np.random.default_rng(seed)
+    return [
+        ExplainRequest(
+            tokens=rng.integers(1, cfg.vocab_size, s).astype(np.int32),
+            target=int(rng.integers(0, cfg.vocab_size)),
+        )
+        for s in lens
+    ]
+
+
+def test_autotuned_engine_zero_steady_state_recompiles(lm_f32, tmp_path):
+    from repro.serve import ExplainEngine, autotune_engine
+    from repro.serve.autotune import bucket_key, cache_path
+
+    cfg, _, params = lm_f32
+    reqs = _requests(cfg, (5, 7, 12))
+    eng = ExplainEngine(cfg, params, m=4, n_int=2, fused=True)
+    report = autotune_engine(eng, reqs, rounds=1, results_dir=str(tmp_path))
+    assert report["buckets"], "autotune must tune every traffic bucket"
+    # tuning leaves the engine's own cache/stats untouched
+    assert eng.stats.misses == 0 and not eng.stats.buckets
+
+    tuned = ExplainEngine(
+        cfg, params, m=4, n_int=2, fused=True,
+        autotune=True, autotune_dir=str(tmp_path),
+    )
+    key = bucket_key((1, 8), "riemann", "paper", 4, 2, True)
+    if key in report["buckets"]:
+        assert tuned._cfg_for((1, 8)).chunk == report["buckets"][key]["winner"]["chunk"]
+    out = tuned.explain(reqs)
+    warmed = tuned.stats.misses
+    out2 = tuned.explain(reqs)
+    assert tuned.stats.misses == warmed, "autotuned replay must be pure hits"
+    for a, b in zip(out, out2):
+        np.testing.assert_array_equal(a["token_scores"], b["token_scores"])
+    # compile-time roofline budgets are first-class serving stats
+    assert all(bs.bytes_accessed > 0 for bs in tuned.stats.buckets.values())
+    assert cache_path(str(tmp_path)) == report["path"]
+
+
+def test_fused_engine_matches_unfused_traces(lm_f32):
+    """Adaptive escalation decisions must be identical fused vs unfused at
+    f32 (the BENCH_hotpath gate, pinned here as a fast regression test) —
+    and the fused engine's hop executables donate their IGState."""
+    from repro.serve import ExplainEngine
+
+    cfg, _, params = lm_f32
+    reqs = _requests(cfg, (5, 9, 12), seed=1)
+    traces = {}
+    for fused in (False, True):
+        eng = ExplainEngine(
+            cfg, params, m=4, n_int=2, adaptive=True, tol=1e-2, m_max=16,
+            fused=fused,
+        )
+        out = eng.explain(reqs)
+        traces[fused] = [(o["m_used"], o["hops"], o["converged"]) for o in out]
+    assert traces[False] == traces[True]
+
+
+# ------------------------------------------- (e) backend-resolved interpret
+
+
+def test_default_interpret_resolves_from_backend():
+    from repro.kernels.common import default_interpret
+
+    assert default_interpret(True) is True
+    assert default_interpret(False) is False
+    assert default_interpret(None) == (jax.default_backend() == "cpu")
