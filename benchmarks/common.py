@@ -22,6 +22,7 @@ from repro.models import cnn
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
 _CKPT = os.path.join(RESULTS_DIR, "bench_cnn_params.npz")
+_VIT_CKPT = os.path.join(RESULTS_DIR, "bench_vit_params.npz")
 
 
 def synthetic_images(key: jax.Array, n: int, cfg=CNN_CONFIG, *, background_frac: float = 0.0):
@@ -93,6 +94,72 @@ def load_or_train_cnn(key=None):
     np.savez(_CKPT, **{f"leaf_{i}": np.asarray(p) for i, p in enumerate(leaves)})
     print(f"# trained bench CNN: final loss {loss:.4f}")
     return params
+
+
+def train_vit(key: jax.Array, steps: int = 250, batch: int = 32, lr: float = 2e-3):
+    """Train the reduced ViT on the same synthetic quadrant task as the CNN
+    (reduced_vit shares the CNN's 32x32x3 / 10-class shapes by design)."""
+    from repro.configs.vit import reduced_vit
+    from repro.models import vit
+    from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+    cfg = reduced_vit()
+    params = vit.init(cfg, key)
+    ocfg = AdamWConfig(lr=lr, warmup_steps=20, total_steps=steps, weight_decay=0.0)
+    opt = adamw_init(params)
+
+    @jax.jit
+    def step(params, opt, k):
+        imgs, labels = synthetic_images(k, batch, cfg, background_frac=0.35)
+
+        def loss_fn(p):
+            logits = vit.forward(cfg, p, imgs)
+            logp = jax.nn.log_softmax(logits)
+            return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], 1))
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt, _ = adamw_update(ocfg, grads, opt, params)
+        return params, opt, loss
+
+    for i in range(steps):
+        params, opt, loss = step(params, opt, jax.random.fold_in(key, i))
+    return cfg, params, float(loss)
+
+
+def load_or_train_vit(key=None):
+    """TRAINED reduced ViT + its config — patch-level attributions only show
+    the paper's sharp-transition regime on a confident model (same argument
+    as ``load_or_train_cnn``). Cached in results/ like the CNN checkpoint."""
+    from repro.configs.vit import reduced_vit
+    from repro.models import vit
+
+    cfg = reduced_vit()
+    key = key if key is not None else jax.random.PRNGKey(43)
+    if os.path.exists(_VIT_CKPT):
+        data = np.load(_VIT_CKPT)
+        leaves, treedef = jax.tree.flatten(
+            vit.param_defs(cfg), is_leaf=lambda x: hasattr(x, "shape")
+        )
+        params = jax.tree.unflatten(
+            treedef, [jnp.asarray(data[f"leaf_{i}"]) for i in range(len(leaves))]
+        )
+        return cfg, params
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    cfg, params, loss = train_vit(key)
+    leaves = jax.tree.leaves(params)
+    np.savez(_VIT_CKPT, **{f"leaf_{i}": np.asarray(p) for i, p in enumerate(leaves)})
+    print(f"# trained bench ViT: final loss {loss:.4f}")
+    return cfg, params
+
+
+def vit_accuracy(params, n: int = 256) -> float:
+    from repro.configs.vit import reduced_vit
+    from repro.models import vit
+
+    cfg = reduced_vit()
+    imgs, labels = synthetic_images(jax.random.PRNGKey(99), n, cfg, background_frac=0.3)
+    pred = jnp.argmax(vit.forward(cfg, params, imgs), -1)
+    return float((pred == labels).mean())
 
 
 def cnn_prob_fn(params):

@@ -71,6 +71,7 @@ def run(
     rounds: int = 3,
     smoke: bool = False,
     seed: int = 0,
+    attn: str = "auto",
 ) -> dict:
     from repro.configs import ARCHS, reduced
     from repro.launch.explain import make_traffic
@@ -86,7 +87,8 @@ def run(
 
     out = {
         "arch": arch, "m": m, "n_int": n_int, "requests": requests,
-        "rounds": rounds, "tol": tol, "device_kind": jax.devices()[0].device_kind,
+        "rounds": rounds, "tol": tol, "attn": attn,
+        "device_kind": jax.devices()[0].device_kind,
         "methods": {}, "gates": {},
     }
     failures: list[str] = []
@@ -97,7 +99,8 @@ def run(
         row: dict = {"accum": spec.accum}
         for label, fused in (("unfused", False), ("fused", True)):
             eng = ExplainEngine(
-                cfg, params, method=method, m=m, n_int=n_int, fused=fused
+                cfg, params, method=method, m=m, n_int=n_int, fused=fused,
+                attn=attn,
             )
             wall = _warmed_wall(eng, reqs, rounds)
             row[label] = {
@@ -128,7 +131,7 @@ def run(
         for label, fused in (("unfused", False), ("fused", True)):
             eng = ExplainEngine(
                 cfg, params, method=method, m=m, n_int=n_int,
-                adaptive=True, tol=tol, m_max=4 * m, fused=fused,
+                adaptive=True, tol=tol, m_max=4 * m, fused=fused, attn=attn,
             )
             res = eng.explain(reqs)
             traces[label] = [
@@ -162,12 +165,12 @@ def run(
         )
 
     # -- autotune + zero-recompile replay (fused, default method) -----------
-    base_eng = ExplainEngine(cfg, params, m=m, n_int=n_int, fused=True)
+    base_eng = ExplainEngine(cfg, params, m=m, n_int=n_int, fused=True, attn=attn)
     tune_report = autotune_engine(
         base_eng, reqs, rounds=rounds, results_dir=RESULTS_DIR
     )
     tuned = ExplainEngine(
-        cfg, params, m=m, n_int=n_int, fused=True,
+        cfg, params, m=m, n_int=n_int, fused=True, attn=attn,
         autotune=True, autotune_dir=RESULTS_DIR,
     )
     tuned_wall = _warmed_wall(tuned, reqs, rounds)

@@ -10,6 +10,9 @@ Order:
                  per method × schedule -> results/BENCH_quality.json
   hotpath      — beyond-paper: fused-vs-materializing stage 2 bytes/latency
                  + adaptive trace parity -> results/BENCH_hotpath.json
+  attention    — beyond-paper (--attention): flash custom-VJP vs
+                 materializing attention on LM + ViT traffic
+                 -> results/BENCH_attention.json
   lm_convergence — beyond-paper: NUIG on the assigned LM families
   roofline     — §Roofline table from the dry-run artifacts
 
@@ -26,6 +29,7 @@ import os
 import time
 
 from benchmarks import (
+    attention,
     convergence,
     hotpath,
     latency,
@@ -86,6 +90,13 @@ def main() -> int:
         help="fused stage-2 bandwidth gate only -> results/BENCH_hotpath.json "
         "(with --smoke: the CI-sized config)",
     )
+    ap.add_argument(
+        "--attention",
+        action="store_true",
+        help="attention hot-path gate only (flash custom-VJP vs materializing "
+        "on the LM + ViT workloads) -> results/BENCH_attention.json "
+        "(with --smoke: the CI-sized config)",
+    )
     args = ap.parse_args()
 
     if args.mesh:
@@ -119,6 +130,27 @@ def main() -> int:
             "pass": out["pass"],
         })
         print(f"# hotpath bench -> {path}")
+        return 0 if out["pass"] else 1
+
+    if args.attention:
+        out = attention.run(smoke=args.smoke)
+        path = _write("BENCH_attention.json", out)
+        _trajectory("attention", {
+            "latency_ratio": {
+                k: v["latency_ratio"] for k, v in out["workloads"].items()
+            },
+            "traces_equal": all(
+                mv["traces_equal"]
+                for wv in out["workloads"].values()
+                for mv in wv["methods"].values()
+            ),
+            "autotune_recompiles": {
+                k: v["autotune"]["steady_state_recompiles"]
+                for k, v in out["workloads"].items()
+            },
+            "pass": out["pass"],
+        })
+        print(f"# attention bench -> {path}")
         return 0 if out["pass"] else 1
 
     if args.adaptive or args.smoke:

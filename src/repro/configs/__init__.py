@@ -27,7 +27,9 @@ from repro.configs import (  # noqa: E402
     whisper_tiny,
     internvl2_26b,
     paper_cnn,
+    vit,
 )
+from repro.configs.vit import VitConfig, reduced_vit
 
 # The 10 assigned architectures (the 40-cell dry-run grid iterates these).
 ARCHS: dict[str, ArchConfig] = {
@@ -47,6 +49,7 @@ ARCHS: dict[str, ArchConfig] = {
 }
 
 PAPER_CNN = paper_cnn.CONFIG
+VIT_S16 = vit.CONFIG
 
 
 def get_config(name: str) -> ArchConfig:
@@ -54,7 +57,11 @@ def get_config(name: str) -> ArchConfig:
         return ARCHS[name]
     if name in (PAPER_CNN.name, "paper_cnn"):
         return PAPER_CNN  # type: ignore[return-value]
-    raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)} + ['paper-cnn']")
+    if name in (VIT_S16.name, "vit"):
+        return VIT_S16  # type: ignore[return-value]
+    raise KeyError(
+        f"unknown arch {name!r}; known: {sorted(ARCHS)} + ['paper-cnn', 'vit-s16']"
+    )
 
 
 __all__ = [
@@ -63,6 +70,9 @@ __all__ = [
     "ShapeConfig",
     "ARCHS",
     "PAPER_CNN",
+    "VIT_S16",
+    "VitConfig",
+    "reduced_vit",
     "LM_SHAPES",
     "SHAPES_BY_NAME",
     "TRAIN_4K",

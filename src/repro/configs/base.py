@@ -75,6 +75,14 @@ class ArchConfig:
     frontend_tokens: int = 0  # patch/frame embeddings prepended to sequence
     frontend_dim: int = 0  # raw embedding dim before projection (0 -> d_model)
 
+    # -- attention implementation --------------------------------------------
+    # "auto": XLA paths (full / blocked by seq length). "flash": the Pallas
+    # kernel with fused custom-VJP backward (explain hot path). Block sizes
+    # are the kernel tilings — autotuned per bucket by serve/autotune.py.
+    attn_impl: Literal["auto", "flash"] = "auto"
+    attn_block_q: int = 128
+    attn_block_k: int = 128
+
     # -- numerics -------------------------------------------------------------
     param_dtype: str = "float32"
     compute_dtype: str = "bfloat16"

@@ -1,4 +1,4 @@
-"""Flash attention (GQA, causal) — Pallas TPU kernel.
+"""Flash attention (GQA, causal, ragged) — Pallas TPU kernels, fwd + bwd.
 
 TPU adaptation of the classic GPU algorithm: Q/K/V tiles are staged in VMEM
 via BlockSpecs, the score tile hits the MXU (block sizes multiples of 128),
@@ -6,10 +6,27 @@ and the online-softmax running state (m, l, acc) lives in VMEM scratch across
 the innermost (sequential) K-block grid dimension — replacing the GPU's
 shared-memory/warp-register carries.
 
-Grid: (B, NQ, Sq/bq, Sk/bk), K innermost. GQA: the K/V BlockSpec index-maps
-query head h -> kv head h // G, so KV tiles are fetched once per group.
-NOTE: fully-masked (future) K blocks are skipped via pl.when on the block
-index — with a causal grid this removes ~half the MXU work.
+Forward grid: (B, NQ, Sq/bq, Sk/bk), K innermost. GQA: the K/V BlockSpec
+index-maps query head h -> kv head h // G, so KV tiles are fetched once per
+group. Fully-masked (future / beyond-kvlen) K blocks are skipped via pl.when
+on the block index — with a causal grid this removes ~half the MXU work.
+
+Backward pass (two kernels, independent tilings — see docs/attention.md):
+
+* residuals are O and the per-row logsumexp ``lse = m + log(l)`` — the
+  (bq, bk) probability tile is recomputed as ``exp(s - lse)`` instead of
+  being materialized, so bwd memory is O(S*D) not O(S^2);
+* ``delta = rowsum(dO * O)`` is precomputed once outside the kernels and
+  shared by both (it is the softmax-jacobian diagonal term);
+* dQ kernel: grid (B, NQ, Sq/bq, Sk/bk) K innermost, one (bq, D) f32 VMEM
+  accumulator that stays resident across the K sweep;
+* dK/dV kernel: grid (B, NKV, Sk/bk, G, Sq/bq) with the GQA group and the Q
+  sweep innermost, so the (bk, D) f32 dK/dV accumulators for one KV tile
+  stay resident while every query head of the group streams past.
+
+Ragged masking: ``kvlen`` is a (B, 1) int32 of valid K lengths; K positions
+>= kvlen[b] are masked in all kernels (this is also how the wrappers in
+``ops.py`` make padded sequence lengths exact).
 """
 from __future__ import annotations
 
@@ -23,10 +40,27 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, causal, bq, bk, scale):
+def _mask(s, *, causal, qi, ki, bq, bk, kvlen):
+    """Apply the causal + ragged-length mask to a (bq, bk) score tile."""
+    kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    keep = kpos < kvlen
+    if causal:
+        qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        keep &= qpos >= kpos
+    return jnp.where(keep, s, NEG_INF), keep
+
+
+# ------------------------------------------------------------------ forward
+
+
+def _flash_fwd_kernel(
+    q_ref, k_ref, v_ref, kvlen_ref, o_ref, lse_ref, m_ref, l_ref, acc_ref,
+    *, causal, bq, bk, scale,
+):
     ki = pl.program_id(3)
     qi = pl.program_id(2)
     nk = pl.num_programs(3)
+    kvlen = kvlen_ref[0, 0]
 
     @pl.when(ki == 0)
     def _init():
@@ -34,17 +68,16 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, causal, 
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # skip K blocks strictly in the future of this whole Q block
-    @pl.when((ki * bk <= qi * bq + bq - 1) if causal else (ki >= 0))
+    # skip K blocks strictly in the future of this Q block or beyond kvlen
+    live = (ki * bk <= qi * bq + bq - 1) if causal else (ki >= 0)
+
+    @pl.when(live & (ki * bk < kvlen))
     def _compute():
         q = q_ref[0, 0].astype(jnp.float32) * scale  # (bq, D)
         k = k_ref[0, 0].astype(jnp.float32)  # (bk, D)
         v = v_ref[0, 0].astype(jnp.float32)  # (bk, D)
         s = q @ k.T  # (bq, bk) — MXU
-        if causal:
-            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
-            kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        s, _ = _mask(s, causal=causal, qi=qi, ki=ki, bq=bq, bk=bk, kvlen=kvlen)
         m_prev = m_ref[...]
         m_new = jnp.maximum(m_prev, s.max(axis=1))
         p = jnp.exp(s - m_new[:, None])
@@ -55,7 +88,60 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, causal, 
 
     @pl.when(ki == nk - 1)
     def _finalize():
-        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+        l = l_ref[...]
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+        lse_ref[0, 0] = m_ref[...] + jnp.log(jnp.maximum(l, 1e-30))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret")
+)
+def flash_attention_fwd_pallas(
+    q: jax.Array,  # (B, NQ, Sq, D)
+    k: jax.Array,  # (B, NKV, Sk, D)
+    v: jax.Array,
+    kvlen: jax.Array,  # (B, 1) int32 valid K lengths
+    *,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (o, lse): the attention output and the (B, NQ, Sq) f32
+    per-row logsumexp residual the backward kernels recompute P from."""
+    B, NQ, Sq, D = q.shape
+    NKV, Sk = k.shape[1], k.shape[2]
+    G = NQ // NKV
+    bq, bk = min(block_q, Sq), min(block_k, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
+    grid = (B, NQ, Sq // bq, Sk // bk)
+    kernel = functools.partial(
+        _flash_fwd_kernel, causal=causal, bq=bq, bk=bk, scale=D**-0.5
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, iq, ik: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, iq, ik: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1), lambda b, h, iq, ik: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bq), lambda b, h, iq, ik: (b, h, iq)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, NQ, Sq, D), q.dtype),
+            jax.ShapeDtypeStruct((B, NQ, Sq), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),  # running max m
+            pltpu.VMEM((bq,), jnp.float32),  # running denom l
+            pltpu.VMEM((bq, D), jnp.float32),  # running output acc
+        ],
+        interpret=interpret,
+    )(q, k, v, kvlen)
 
 
 @functools.partial(
@@ -71,6 +157,72 @@ def flash_attention_pallas(
     block_k: int = 128,
     interpret: bool = True,
 ) -> jax.Array:
+    B, Sk = q.shape[0], k.shape[2]
+    kvlen = jnp.full((B, 1), Sk, jnp.int32)
+    o, _ = flash_attention_fwd_pallas(
+        q, k, v, kvlen, causal=causal, block_q=block_q, block_k=block_k,
+        interpret=interpret,
+    )
+    return o
+
+
+# ----------------------------------------------------------------- backward
+
+
+def _flash_bwd_dq_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, kvlen_ref, dq_ref, acc_ref,
+    *, causal, bq, bk, scale,
+):
+    ki = pl.program_id(3)
+    qi = pl.program_id(2)
+    nk = pl.num_programs(3)
+    kvlen = kvlen_ref[0, 0]
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    live = (ki * bk <= qi * bq + bq - 1) if causal else (ki >= 0)
+
+    @pl.when(live & (ki * bk < kvlen))
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)  # (bk, D)
+        do = do_ref[0, 0].astype(jnp.float32)  # (bq, D)
+        lse = lse_ref[0, 0]  # (bq,) f32
+        delta = delta_ref[0, 0]  # (bq,) f32
+        s = (q @ k.T) * scale
+        _, keep = _mask(s, causal=causal, qi=qi, ki=ki, bq=bq, bk=bk, kvlen=kvlen)
+        # recompute P from the lse residual; explicit zero (not exp(NEG_INF -
+        # lse)) so fully-masked rows with lse ~ NEG_INF stay exactly zero
+        p = jnp.where(keep, jnp.exp(s - lse[:, None]), 0.0)
+        dp = do @ v.T  # (bq, bk)
+        ds = p * (dp - delta[:, None])
+        acc_ref[...] += ds @ k
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        dq_ref[0, 0] = (acc_ref[...] * scale).astype(dq_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret")
+)
+def flash_attention_bwd_dq_pallas(
+    q: jax.Array,  # (B, NQ, Sq, D)
+    k: jax.Array,  # (B, NKV, Sk, D)
+    v: jax.Array,
+    do: jax.Array,  # (B, NQ, Sq, D) output cotangent
+    lse: jax.Array,  # (B, NQ, Sq) f32 forward residual
+    delta: jax.Array,  # (B, NQ, Sq) f32 rowsum(dO * O)
+    kvlen: jax.Array,  # (B, 1) int32
+    *,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
     B, NQ, Sq, D = q.shape
     NKV, Sk = k.shape[1], k.shape[2]
     G = NQ // NKV
@@ -78,7 +230,7 @@ def flash_attention_pallas(
     assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
     grid = (B, NQ, Sq // bq, Sk // bk)
     kernel = functools.partial(
-        _flash_kernel, causal=causal, bq=bq, bk=bk, scale=D**-0.5
+        _flash_bwd_dq_kernel, causal=causal, bq=bq, bk=bk, scale=D**-0.5
     )
     return pl.pallas_call(
         kernel,
@@ -87,13 +239,119 @@ def flash_attention_pallas(
             pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
             pl.BlockSpec((1, 1, bk, D), lambda b, h, iq, ik: (b, h // G, ik, 0)),
             pl.BlockSpec((1, 1, bk, D), lambda b, h, iq, ik: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bq), lambda b, h, iq, ik: (b, h, iq)),
+            pl.BlockSpec((1, 1, bq), lambda b, h, iq, ik: (b, h, iq)),
+            pl.BlockSpec((1, 1), lambda b, h, iq, ik: (b, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
         out_shape=jax.ShapeDtypeStruct((B, NQ, Sq, D), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, D), jnp.float32)],  # dq accumulator
+        interpret=interpret,
+    )(q, k, v, do, lse, delta, kvlen)
+
+
+def _flash_bwd_dkv_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, kvlen_ref,
+    dk_ref, dv_ref, dk_acc, dv_acc,
+    *, causal, bq, bk, scale,
+):
+    jk = pl.program_id(2)
+    g = pl.program_id(3)
+    qi = pl.program_id(4)
+    ng = pl.num_programs(3)
+    nq = pl.num_programs(4)
+    kvlen = kvlen_ref[0, 0]
+
+    @pl.when((g == 0) & (qi == 0))
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    # skip Q blocks strictly before this K block (causal) or dead K blocks
+    live = (qi * bq + bq - 1 >= jk * bk) if causal else (qi >= 0)
+
+    @pl.when(live & (jk * bk < kvlen))
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)  # (bk, D)
+        do = do_ref[0, 0].astype(jnp.float32)  # (bq, D)
+        lse = lse_ref[0, 0]  # (bq,) f32
+        delta = delta_ref[0, 0]  # (bq,) f32
+        s = (q @ k.T) * scale
+        _, keep = _mask(s, causal=causal, qi=qi, ki=jk, bq=bq, bk=bk, kvlen=kvlen)
+        p = jnp.where(keep, jnp.exp(s - lse[:, None]), 0.0)
+        dv_acc[...] += p.T @ do
+        dp = do @ v.T
+        ds = p * (dp - delta[:, None])
+        dk_acc[...] += ds.T @ q
+
+    @pl.when((g == ng - 1) & (qi == nq - 1))
+    def _finalize():
+        dk_ref[0, 0] = (dk_acc[...] * scale).astype(dk_ref.dtype)
+        dv_ref[0, 0] = dv_acc[...].astype(dv_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret")
+)
+def flash_attention_bwd_dkv_pallas(
+    q: jax.Array,  # (B, NQ, Sq, D)
+    k: jax.Array,  # (B, NKV, Sk, D)
+    v: jax.Array,
+    do: jax.Array,  # (B, NQ, Sq, D)
+    lse: jax.Array,  # (B, NQ, Sq) f32
+    delta: jax.Array,  # (B, NQ, Sq) f32
+    kvlen: jax.Array,  # (B, 1) int32
+    *,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    B, NQ, Sq, D = q.shape
+    NKV, Sk = k.shape[1], k.shape[2]
+    G = NQ // NKV
+    bq, bk = min(block_q, Sq), min(block_k, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
+    # group g and the Q sweep are the two innermost (sequential) dims so the
+    # (bk, D) dK/dV accumulators stay VMEM-resident for one KV tile
+    grid = (B, NKV, Sk // bk, G, Sq // bq)
+    kernel = functools.partial(
+        _flash_bwd_dkv_kernel, causal=causal, bq=bq, bk=bk, scale=D**-0.5
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), functools.partial(_q_index, G=G)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, hk, jk, g, iq: (b, hk, jk, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, hk, jk, g, iq: (b, hk, jk, 0)),
+            pl.BlockSpec((1, 1, bq, D), functools.partial(_q_index, G=G)),
+            pl.BlockSpec((1, 1, bq), functools.partial(_row_index, G=G)),
+            pl.BlockSpec((1, 1, bq), functools.partial(_row_index, G=G)),
+            pl.BlockSpec((1, 1), lambda b, hk, jk, g, iq: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bk, D), lambda b, hk, jk, g, iq: (b, hk, jk, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, hk, jk, g, iq: (b, hk, jk, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, NKV, Sk, D), k.dtype),
+            jax.ShapeDtypeStruct((B, NKV, Sk, D), v.dtype),
+        ],
         scratch_shapes=[
-            pltpu.VMEM((bq,), jnp.float32),  # running max m
-            pltpu.VMEM((bq,), jnp.float32),  # running denom l
-            pltpu.VMEM((bq, D), jnp.float32),  # running output acc
+            pltpu.VMEM((bk, D), jnp.float32),  # dk accumulator
+            pltpu.VMEM((bk, D), jnp.float32),  # dv accumulator
         ],
         interpret=interpret,
-    )(q, k, v)
+    )(q, k, v, do, lse, delta, kvlen)
+
+
+def _q_index(b, hk, jk, g, iq, *, G):
+    return (b, hk * G + g, iq, 0)
+
+
+def _row_index(b, hk, jk, g, iq, *, G):
+    return (b, hk * G + g, iq)

@@ -1,8 +1,45 @@
-"""Pure-jnp oracle for the flash attention kernel (GQA, causal)."""
+"""Pure-jnp oracle for the flash attention kernel (GQA, causal, ragged).
+
+``attention_ref`` is the forward oracle; ``attention_vjp_ref`` spells out the
+backward pass the Pallas kernels implement (dP -> dS -> dQ/dK/dV with the
+softmax-jacobian diagonal term ``delta = rowsum(dO * O)``), so kernel parity
+tests can check gradients against explicit formulas rather than only against
+jax.grad of the forward.
+"""
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _masked_probs(
+    q: jax.Array,  # (B, NQ, Sq, D)
+    k: jax.Array,  # (B, NKV, Sk, D)
+    *,
+    causal: bool,
+    lengths: Optional[jax.Array],
+) -> jax.Array:
+    """(B, NKV, G, Sq, Sk) f32 softmax probabilities with causal/ragged mask."""
+    B, NQ, Sq, D = q.shape
+    NKV, Sk = k.shape[1], k.shape[2]
+    G = NQ // NKV
+    qg = q.reshape(B, NKV, G, Sq, D).astype(jnp.float32) * (D**-0.5)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k.astype(jnp.float32))
+    mask = jnp.ones((1, 1, 1, Sq, Sk), bool)
+    if causal:
+        mask = mask & (jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :])
+    if lengths is not None:
+        valid = jnp.arange(Sk)[None, :] < lengths.reshape(B, 1)  # (B, Sk)
+        mask = mask & valid[:, None, None, None, :]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # rows with no valid key (e.g. length 0) softmax to uniform garbage; zero
+    # them so the oracle matches the kernel's l=0 -> o=0 convention
+    return jnp.where(mask.any(axis=-1, keepdims=True), p, 0.0)
 
 
 def attention_ref(
@@ -11,15 +48,48 @@ def attention_ref(
     v: jax.Array,  # (B, NKV, Sk, D)
     *,
     causal: bool = True,
+    lengths: Optional[jax.Array] = None,  # (B,) or (B, 1) valid K lengths
 ) -> jax.Array:
     B, NQ, Sq, D = q.shape
-    NKV, Sk = k.shape[1], k.shape[2]
-    G = NQ // NKV
-    qg = q.reshape(B, NKV, G, Sq, D).astype(jnp.float32) * (D**-0.5)
-    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k.astype(jnp.float32))
-    if causal:
-        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :]
-        s = jnp.where(mask, s, -1e30)
-    a = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bhgqk,bhkd->bhgqd", a, v.astype(jnp.float32))
+    p = _masked_probs(q, k, causal=causal, lengths=lengths)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
     return o.reshape(B, NQ, Sq, D).astype(q.dtype)
+
+
+def attention_vjp_ref(
+    q: jax.Array,  # (B, NQ, Sq, D)
+    k: jax.Array,  # (B, NKV, Sk, D)
+    v: jax.Array,
+    do: jax.Array,  # (B, NQ, Sq, D) output cotangent
+    *,
+    causal: bool = True,
+    lengths: Optional[jax.Array] = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Explicit (dq, dk, dv) — the formulas the Pallas bwd kernels compute.
+
+    With P = softmax(scale * Q K^T + mask) and O = P V:
+        dV = P^T dO
+        dP = dO V^T
+        dS = P * (dP - delta),  delta = rowsum(dO * O)
+        dQ = scale * dS K,  dK = scale * dS^T Q  (summed over the GQA group)
+    """
+    B, NQ, Sq, D = q.shape
+    NKV = k.shape[1]
+    G = NQ // NKV
+    scale = D**-0.5
+    p = _masked_probs(q, k, causal=causal, lengths=lengths)  # (B,NKV,G,Sq,Sk)
+    vf = v.astype(jnp.float32)
+    dog = do.reshape(B, NKV, G, Sq, D).astype(jnp.float32)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+    dv = jnp.einsum("bhgqk,bhgqd->bhkd", p, dog)
+    dp = jnp.einsum("bhgqd,bhkd->bhgqk", dog, vf)
+    delta = jnp.sum(dog * o, axis=-1)  # (B, NKV, G, Sq)
+    ds = p * (dp - delta[..., None])
+    qg = q.reshape(B, NKV, G, Sq, D).astype(jnp.float32)
+    dq = scale * jnp.einsum("bhgqk,bhkd->bhgqd", ds, k.astype(jnp.float32))
+    dk = scale * jnp.einsum("bhgqk,bhgqd->bhkd", ds, qg)
+    return (
+        dq.reshape(B, NQ, Sq, D).astype(q.dtype),
+        dk.astype(k.dtype),
+        dv.astype(v.dtype),
+    )

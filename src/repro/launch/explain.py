@@ -22,6 +22,17 @@ before any jax call; the equivalent manual form is
 ``--method`` picks the attribution method from the ``repro.core.methods``
 registry (see the table in ``--help``); ``--schedule`` picks the
 interpolation schedule family — the two compose freely (DESIGN.md §8).
+
+``--attn flash`` serves the model through the Pallas flash-attention
+custom-VJP kernel (interpret mode on CPU) instead of materializing
+attention; ``--workload`` picks what gets explained:
+
+  traffic   mixed-length random token traffic (the default serving sweep)
+  prompt    ONE fixed deterministic prompt — prints the per-token
+            attribution table (LM prompt attribution)
+  vit       the reduced ViT on a synthetic image — patch-feature requests
+            through the same bucketed engine; prints the top attributed
+            patches on the patch grid (docs/attention.md quickstarts)
 """
 from __future__ import annotations
 
@@ -29,6 +40,7 @@ import argparse
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCHS, get_config, reduced
@@ -137,6 +149,17 @@ def main() -> int:
         help="fused stage 2: interpolation composed into the VJP (DESIGN.md §10)",
     )
     ap.add_argument(
+        "--attn", default="auto", choices=("auto", "flash"),
+        help="attention implementation: flash = Pallas custom-VJP kernel "
+        "(O(S·D) backward residuals; interpret mode on CPU)",
+    )
+    ap.add_argument(
+        "--workload", default="traffic", choices=("traffic", "prompt", "vit"),
+        help="traffic = mixed-length token traffic; prompt = one fixed LM "
+        "prompt with a per-token attribution table; vit = reduced-ViT patch "
+        "attribution demo (ignores --arch/--min-seq/--max-seq)",
+    )
+    ap.add_argument(
         "--use-kernels", action="store_true",
         help="inject the Pallas kernel set (interpret-mode on CPU)",
     )
@@ -163,11 +186,41 @@ def main() -> int:
         mesh = make_explain_mesh(dp, tp)
         print(f"mesh: data={dp} model={tp} over {jax.device_count()} devices")
 
-    cfg = reduced(get_config(args.arch))
-    if cfg.frontend or cfg.is_encdec:
-        print(f"note: {cfg.name} frontend is stubbed; explaining token stream only")
-    model = Model(cfg)
-    params = model.init(jax.random.PRNGKey(args.seed))
+    engine_kwargs: dict = {}
+    fixed_reqs = None
+    if args.workload == "vit":
+        from repro.configs.vit import reduced_vit
+        from repro.models import vit
+
+        cfg = reduced_vit()
+        params = vit.init(cfg, jax.random.PRNGKey(args.seed))
+        img = jax.random.uniform(
+            jax.random.PRNGKey(args.seed + 1),
+            (1, cfg.image_size, cfg.image_size, cfg.channels),
+        )
+        target = int(jnp.argmax(vit.forward(cfg, params, img), -1)[0])
+        feats = np.asarray(vit.patchify(cfg, img), np.float32)[0]
+        fixed_reqs = [
+            ExplainRequest(
+                tokens=np.arange(cfg.num_patches, dtype=np.int32),
+                target=target,
+                features=feats,
+            )
+        ]
+        engine_kwargs["seq_buckets"] = (cfg.num_patches,)
+        print(f"vit workload: {cfg.num_patches} patches, predicted class {target}")
+    else:
+        cfg = reduced(get_config(args.arch))
+        if cfg.frontend or cfg.is_encdec:
+            print(f"note: {cfg.name} frontend is stubbed; explaining token stream only")
+        model = Model(cfg)
+        params = model.init(jax.random.PRNGKey(args.seed))
+        if args.workload == "prompt":
+            # one DETERMINISTIC prompt: same tokens every run, target fixed —
+            # the per-token table below is reproducible output
+            prompt = (np.arange(1, 13, dtype=np.int32) * 7) % (cfg.vocab_size - 1) + 1
+            fixed_reqs = [ExplainRequest(tokens=prompt, target=int(prompt[-1]))]
+            print(f"prompt workload: tokens={prompt.tolist()} target={prompt[-1]}")
     rng = np.random.default_rng(args.seed)
 
     out = None
@@ -188,7 +241,9 @@ def main() -> int:
             sigma=args.sigma,
             fused=args.fused,
             use_kernels=args.use_kernels,
+            attn=args.attn,
             autotune=args.autotune,
+            **engine_kwargs,
         )
         mode = f"adaptive tol={args.tol} ladder={engine.m_ladder}" if args.adaptive else f"m={args.m}"
         samples = f" samples={engine.n_samples}" if engine.n_samples > 1 else ""
@@ -197,7 +252,11 @@ def main() -> int:
         print(f"method={args.method} schedule={sched_name} {mode}{samples}{flags} "
               f"traffic={args.rounds}x{args.requests} reqs S∈[{args.min_seq},{args.max_seq}]")
         for rnd in range(args.rounds):
-            reqs = make_traffic(cfg, args.requests, args.min_seq, args.max_seq, rng)
+            reqs = (
+                fixed_reqs
+                if fixed_reqs is not None
+                else make_traffic(cfg, args.requests, args.min_seq, args.max_seq, rng)
+            )
             t0 = time.perf_counter()
             out = engine.explain(reqs)
             wall = time.perf_counter() - t0
@@ -209,8 +268,22 @@ def main() -> int:
                          f" conv={sum(o['converged'] for o in out)}/{len(out)}")
             print(line)
         report(engine)
-    top = np.argsort(-np.abs(out[0]["token_scores"]))[:5]
-    print("top-5 attributed positions (last round, req 0):", top)
+    scores = np.asarray(out[0]["token_scores"])
+    if args.workload == "prompt":
+        print("per-token attribution (pos, token, score):")
+        for i, (t, s) in enumerate(zip(fixed_reqs[0].tokens, scores)):
+            print(f"  {i:3d} {int(t):6d} {s:+.6f}")
+    elif args.workload == "vit":
+        g = cfg.image_size // cfg.patch_size
+        grid = scores.reshape(g, g)
+        flat = np.argsort(-np.abs(grid), axis=None)[:5]
+        print(f"top-5 attributed patches on the {g}x{g} grid (row, col, score):")
+        for idx in flat:
+            r, c = divmod(int(idx), g)
+            print(f"  ({r}, {c}) {grid[r, c]:+.6f}")
+    else:
+        top = np.argsort(-np.abs(scores))[:5]
+        print("top-5 attributed positions (last round, req 0):", top)
     return 0
 
 

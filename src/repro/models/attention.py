@@ -65,6 +65,7 @@ def full_attention(
     causal: bool = True,
     q_offset: int = 0,
     window: int = 0,
+    kv_len: Optional[jax.Array] = None,  # (B,) valid K lengths (ragged batch)
 ) -> jax.Array:
     """Reference einsum attention; materializes (Sq, Sk) scores. Small-S path.
 
@@ -86,7 +87,12 @@ def full_attention(
         mask &= qpos[:, None] >= kpos[None, :]
     if window:
         mask &= qpos[:, None] - kpos[None, :] < window
-    s = jnp.where(mask, s, NEG_INF)
+    if kv_len is not None:  # per-row ragged mask: (B, 1, Sq, Sk)
+        valid = kpos[None, :] < kv_len.reshape(-1, 1)  # (B, Sk)
+        full = mask[None, None] & valid[:, None, None, :]
+        s = jnp.where(full, s, NEG_INF)
+    else:
+        s = jnp.where(mask, s, NEG_INF)
     a = jax.nn.softmax(s, axis=-1).astype(q.dtype)
     o = jnp.einsum("bhqk,bkhd->bqhd", a, ve)
     return o
@@ -247,14 +253,28 @@ def dispatch_attention(
     *,
     mixer: str,
     causal: bool,
+    kv_len: Optional[jax.Array] = None,  # (B,) ragged valid K lengths
     block_threshold: int = 4096,
 ) -> jax.Array:
-    """Pick the attention algorithm for a (layer kind, seq length) pair."""
+    """Pick the attention algorithm for a (layer kind, seq length) pair.
+
+    ``cfg.attn_impl == "flash"`` routes full-attention layers through the
+    Pallas kernel (custom-VJP backward, no (B, H, S, S) score tensor in
+    either direction); everything else stays on the XLA paths. Costing mode
+    always materializes: Pallas flops/bytes are invisible to cost_analysis.
+    """
     S = q.shape[1]
     if mixer == "local" and cfg.sliding_window:
         return local_attention(q, k, v, window=cfg.sliding_window)
     if _common.COSTING:  # costing mode: straight-line HLO, same flops
-        return full_attention(q, k, v, causal=causal)
-    if S > block_threshold:
+        return full_attention(q, k, v, causal=causal, kv_len=kv_len)
+    if getattr(cfg, "attn_impl", "auto") == "flash":
+        from repro.kernels.flash_attention.ops import flash_attention
+
+        return flash_attention(
+            q, k, v, causal=causal, lengths=kv_len,
+            block_q=cfg.attn_block_q, block_k=cfg.attn_block_k,
+        )
+    if S > block_threshold and kv_len is None:
         return blocked_attention(q, k, v, causal=causal)
-    return full_attention(q, k, v, causal=causal)
+    return full_attention(q, k, v, causal=causal, kv_len=kv_len)

@@ -46,6 +46,7 @@ def apply_layer(
     positions: jax.Array,
     causal: bool = True,
     enc_out: Optional[jax.Array] = None,
+    kv_len: Optional[jax.Array] = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Full-sequence layer. Returns (x, moe_aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
@@ -55,7 +56,9 @@ def apply_layer(
         q, k, v = attn.qkv(p["mixer"], h, dt)
         q = rope(q, positions, cfg.rope_theta)
         k = rope(k, positions, cfg.rope_theta)
-        o = attn.dispatch_attention(cfg, q, k, v, mixer=spec.mixer, causal=causal)
+        o = attn.dispatch_attention(
+            cfg, q, k, v, mixer=spec.mixer, causal=causal, kv_len=kv_len
+        )
         x = x + attn.out_proj(p["mixer"], o, dt)
     elif spec.mixer == "mamba":
         h = rmsnorm(p["norm1"], x, cfg.norm_eps)

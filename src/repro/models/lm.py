@@ -108,6 +108,7 @@ def hidden_from_embeds(
     *,
     enc_out: Optional[jax.Array] = None,
     remat: bool = False,
+    lengths: Optional[jax.Array] = None,  # (B,) ragged valid lengths
 ) -> tuple[jax.Array, jax.Array]:
     """Backbone over embeddings. Returns (hidden (B,S,d), moe_aux)."""
     pos = jnp.broadcast_to(jnp.arange(e.shape[1]), e.shape[:2])
@@ -116,7 +117,8 @@ def hidden_from_embeds(
         aux = jnp.zeros((), jnp.float32)
         for spec, lp in zip(cfg.pattern, period_params):
             x, a = blocks.apply_layer(
-                cfg, spec, lp, x, positions=pos, causal=True, enc_out=enc_out
+                cfg, spec, lp, x, positions=pos, causal=True, enc_out=enc_out,
+                kv_len=lengths,
             )
             x = constrain(x, "batch", "seq", None)  # residual stays DP/SP
             aux = aux + a
@@ -130,7 +132,10 @@ def hidden_from_embeds(
     x, auxs = scan_or_unroll(scan_body, e, params["layers"])
     aux = auxs.sum()
     for spec, lp in zip(cfg.remainder_specs, params["rem"]):
-        x, a = blocks.apply_layer(cfg, spec, lp, x, positions=pos, causal=True, enc_out=enc_out)
+        x, a = blocks.apply_layer(
+            cfg, spec, lp, x, positions=pos, causal=True, enc_out=enc_out,
+            kv_len=lengths,
+        )
         aux = aux + a
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
     return x, aux

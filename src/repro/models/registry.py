@@ -79,16 +79,38 @@ class Model:
         Returns f(embeds, aux) -> (B,) with aux = {"target": (B,) token ids,
         "pos": (B,) position of each example's last REAL token}. Right-padded
         batches read their logits at pos = len-1, so a causal model produces
-        the same value as the unpadded forward.
+        the same value as the unpadded forward. The flash path additionally
+        threads per-row lengths so the kernel's kvlen block-skip does no work
+        on padding (the XLA path needs no mask: causal right-padding is
+        already exact, and leaving it unmasked keeps its HLO — and the
+        hotpath bytes baselines — unchanged).
         """
+        flash = getattr(self.cfg, "attn_impl", "auto") == "flash"
 
         def f(e: jax.Array, aux: dict) -> jax.Array:
-            h, _ = lm.hidden_from_embeds(self.cfg, params, e)
+            lengths = aux["pos"] + 1 if flash else None
+            h, _ = lm.hidden_from_embeds(self.cfg, params, e, lengths=lengths)
             rows = jnp.arange(e.shape[0])
             lg = lm.logits(self.cfg, params, h[rows, aux["pos"]]).astype(jnp.float32)
             return jax.nn.log_softmax(lg, axis=-1)[rows, aux["target"]]
 
         return f
+
+
+def model_for(cfg):
+    """Config -> model facade: ArchConfig -> Model, VitConfig -> VitModel.
+
+    Both facades expose the explain-engine surface: ``init``,
+    ``target_logprob_at_fn`` and an embedding hook (``embed_inputs`` for
+    token models, ``embed_features`` for patch models).
+    """
+    if isinstance(cfg, ArchConfig):
+        return Model(cfg)
+    if getattr(cfg, "patch_size", 0):
+        from repro.models.vit import VitModel
+
+        return VitModel(cfg)
+    raise TypeError(f"no model facade for config type {type(cfg).__name__}")
 
 
 def input_specs(cfg: ArchConfig, shape: ShapeConfig, *, kv_slots: int = 0) -> dict:

@@ -48,11 +48,19 @@ DEFAULT_BLOCK_F = 512
 
 @dataclass(frozen=True)
 class HotpathConfig:
-    """One tuned stage-2 configuration for a bucket."""
+    """One tuned stage-2 configuration for a bucket.
+
+    ``attn_block_q``/``attn_block_k`` are the flash-attention kernel tilings
+    (0 = the model config's defaults); they only matter for engines serving
+    an ``attn_impl == "flash"`` model, where the attention blocks are baked
+    into the differentiated model function itself.
+    """
 
     chunk: int
     block_k: int = DEFAULT_BLOCK_K
     block_f: int = DEFAULT_BLOCK_F
+    attn_block_q: int = 0
+    attn_block_k: int = 0
 
 
 def device_kind() -> str:
@@ -73,16 +81,21 @@ def bucket_key(
     m: int,
     n_int: int,
     fused: bool,
+    attn: str = "auto",
 ) -> str:
     """Cache key for one bucket's tuned config (DESIGN.md §10).
 
     Keyed by everything that changes the compiled stage-2 program EXCEPT the
     knobs being tuned: the bucket shape, the accumulator CLASS (methods
     sharing an accumulator share executables, §8), the schedule family, the
-    (m, n_int) budget, and whether stage 2 is fused. The device rides the
-    cache FILENAME (``cache_path``), not the key.
+    (m, n_int) budget, whether stage 2 is fused, and the model's attention
+    implementation (``"+flash"`` suffix — a flash model compiles a different
+    program than the materializing one, so their tuned configs never alias).
+    The device rides the cache FILENAME (``cache_path``), not the key.
     """
     tag = "fused" if fused else "unfused"
+    if attn != "auto":
+        tag += f"+{attn}"
     return f"B{bucket[0]}xS{bucket[1]}/{accum}/{schedule}/m{m}/n{n_int}/{tag}"
 
 
@@ -120,11 +133,14 @@ class AutotuneCache:
             chunk=int(e["chunk"]),
             block_k=int(e.get("block_k", DEFAULT_BLOCK_K)),
             block_f=int(e.get("block_f", DEFAULT_BLOCK_F)),
+            attn_block_q=int(e.get("attn_block_q", 0)),
+            attn_block_k=int(e.get("attn_block_k", 0)),
         )
 
     def put(self, key: str, cfg: HotpathConfig, metrics: dict) -> None:
         self.entries[key] = {
             "chunk": cfg.chunk, "block_k": cfg.block_k, "block_f": cfg.block_f,
+            "attn_block_q": cfg.attn_block_q, "attn_block_k": cfg.attn_block_k,
             **metrics,
         }
 
@@ -161,10 +177,11 @@ def autotune_engine(
     max_measured: int = 3,
     block_k_grid: Sequence[int] = (DEFAULT_BLOCK_K,),
     block_f_grid: Sequence[int] = (DEFAULT_BLOCK_F,),
+    attn_block_grid: Sequence[tuple[int, int]] = ((0, 0),),
     results_dir: str = "results",
     save: bool = True,
 ) -> dict:
-    """Tune (chunk, block_k, block_f) for every bucket ``requests`` touches.
+    """Tune (chunk, block_k, block_f[, attn blocks]) per touched bucket.
 
     ``engine`` is an ``ExplainEngine``; ``requests`` is sample traffic whose
     plan buckets define what gets tuned (tune with the traffic you serve).
@@ -174,7 +191,9 @@ def autotune_engine(
     ``max_measured`` roofline-best run the measured sweep. Block grids
     beyond the defaults only matter when the engine injects Pallas kernels
     (``use_kernels=True``); the default single-point grids keep the sweep
-    to a chunk scan.
+    to a chunk scan. ``attn_block_grid`` sweeps (attn_block_q, attn_block_k)
+    flash-attention tilings and only applies to flash engines ((0, 0) = the
+    model config's blocks); it is ignored — one (0, 0) point — otherwise.
 
     Returns a report dict (per-bucket candidates + winners); with ``save``
     the winners are persisted to ``results/autotune_<device>.json`` for
@@ -199,6 +218,11 @@ def autotune_engine(
         pad_id=engine.pad_id,
         batch_multiple=engine.dp,
     )
+    attn_grid = (
+        tuple(attn_block_grid)
+        if getattr(engine, "attn", "auto") == "flash"
+        else ((0, 0),)
+    )
     report = {"device": cache.device, "hw": hw.name, "buckets": {}}
     seen: set[tuple[int, int]] = set()
     for bb in plan:
@@ -211,11 +235,12 @@ def autotune_engine(
         for chunk in chunk_candidates(engine.m):
             for bk in block_k_grid:
                 for bf in block_f_grid:
-                    cfg = HotpathConfig(chunk, bk, bf)
-                    fn = engine._attr_fn_at(cfg)
-                    compiled = jax.jit(fn).lower(*sds).compile()
-                    terms = hotpath_terms(cost_analysis_dict(compiled), hw)
-                    cands.append({"cfg": cfg, "compiled": compiled, **terms})
+                    for abq, abk in attn_grid:
+                        cfg = HotpathConfig(chunk, bk, bf, abq, abk)
+                        fn = engine._attr_fn_at(cfg)
+                        compiled = jax.jit(fn).lower(*sds).compile()
+                        terms = hotpath_terms(cost_analysis_dict(compiled), hw)
+                        cands.append({"cfg": cfg, "compiled": compiled, **terms})
         # roofline prune: only the predicted-fastest few get measured
         cands.sort(key=lambda c: c["bound_s"])
         for c in cands[:max_measured]:
@@ -225,7 +250,7 @@ def autotune_engine(
         best = min(cands[:max_measured], key=lambda c: c["latency_s"])
         key = bucket_key(
             bb.bucket, engine._spec.accum, engine.schedule, engine.m,
-            engine.n_int, engine.fused,
+            engine.n_int, engine.fused, attn=getattr(engine, "attn", "auto"),
         )
         cache.put(
             key,

@@ -81,6 +81,9 @@ class BucketBatch(NamedTuple):
     lens: np.ndarray  # (B,) int32 true lengths (pad rows repeat a real row)
     targets: np.ndarray  # (B,) int32
     mask: np.ndarray  # (B, S) float32, 1.0 on real tokens
+    # feature-space requests (e.g. ViT patch features): (B, S, *F) float32,
+    # zero-padded; None for token-only traffic
+    features: Optional[np.ndarray] = None
 
 
 def plan_buckets(
@@ -94,7 +97,10 @@ def plan_buckets(
 ) -> list[BucketBatch]:
     """Group heterogeneous ExplainRequests into padded shape buckets.
 
-    requests: objects with ``.tokens`` (1-D int array) and ``.target`` (int).
+    requests: objects with ``.tokens`` (1-D int array) and ``.target`` (int);
+    an optional ``.features`` ((S, *F) float array, e.g. ViT patch features)
+    rides the plan zero-padded — all requests in a plan must agree on whether
+    they carry features (mixed traffic would need per-bucket model facades).
     max_batch caps real rows per batch (0 = unlimited); batch_buckets=None
     disables batch-axis padding (B = number of grouped rows).
     ``batch_multiple`` rounds every padded B up to a multiple of the mesh's
@@ -118,11 +124,25 @@ def plan_buckets(
             lens = np.empty((B,), np.int32)
             targets = np.empty((B,), np.int32)
             mask = np.zeros((B, S), np.float32)
+            features = None
+            has_feat = getattr(requests[padded_rows[0]], "features", None) is not None
             for j, ri in enumerate(padded_rows):
                 t = np.asarray(requests[ri].tokens, np.int32)
                 tokens[j, : len(t)] = t
                 lens[j] = len(t)
                 targets[j] = int(requests[ri].target)
                 mask[j, : len(t)] = 1.0
-            out.append(BucketBatch((B, S), tuple(rows), tokens, lens, targets, mask))
+                f = getattr(requests[ri], "features", None)
+                if (f is not None) != has_feat:
+                    raise ValueError(
+                        "plan_buckets: mixed feature/token requests in one plan"
+                    )
+                if f is not None:
+                    f = np.asarray(f, np.float32)
+                    if features is None:
+                        features = np.zeros((B, S) + f.shape[1:], np.float32)
+                    features[j, : f.shape[0]] = f
+            out.append(
+                BucketBatch((B, S), tuple(rows), tokens, lens, targets, mask, features)
+            )
     return out

@@ -66,6 +66,7 @@ from __future__ import annotations
 import functools
 import time
 import warnings
+import dataclasses
 from dataclasses import dataclass, field, replace
 from typing import Any, Optional, Sequence
 
@@ -79,7 +80,7 @@ from repro.core.api import Explainer
 from repro.core.baselines import pad_embedding
 from repro.core.probes import probe_cost
 from repro.core.schedule import Schedule, family, m_ladder
-from repro.models.registry import Model
+from repro.models.registry import model_for
 from repro.roofline import cost_analysis_dict
 from repro.serve.autotune import AutotuneCache, HotpathConfig, bucket_key
 from repro.sharding import (
@@ -102,6 +103,10 @@ from repro.serve.batching import (
 class ExplainRequest:
     tokens: np.ndarray  # (S,) int32 prompt — lengths may differ per request
     target: int  # token id whose next-token log-prob is attributed
+    # feature-space request (patch models): (S, *F) float patch features from
+    # ``models.vit.patchify``; ``tokens`` then only sets the length/bucket
+    # (use e.g. arange(num_patches)) and ``target`` is the attributed class
+    features: Optional[np.ndarray] = None
 
 
 @dataclass
@@ -195,6 +200,10 @@ class ExplainEngine:
             materializing oracle path (the BENCH_hotpath reference).
         use_kernels / autotune / autotune_dir: Pallas kernel injection and
             the per-(bucket, device) tuned-config cache (§10).
+        attn: "flash" serves the model with ``attn_impl="flash"`` — every
+            executable differentiates through the Pallas flash-attention
+            custom VJP (docs/attention.md); tuned attention block sizes from
+            the autotune cache rebuild the model closure per bucket.
 
     Example (tiny CPU-reduced LM, one mixed-length round):
 
@@ -239,9 +248,21 @@ class ExplainEngine:
         sample_seed: int = 0,
         fused: bool = False,
         use_kernels: bool = False,
+        attn: str = "auto",
         autotune: bool = False,
         autotune_dir: str = "results",
     ):
+        # attention implementation of the SERVED model: "flash" rebuilds the
+        # config with attn_impl="flash" so every executable differentiates
+        # through the Pallas custom-VJP kernel instead of materializing the
+        # (B·K, H, S, S) score tensor; "auto" leaves the config untouched.
+        # Rides every cache key — flash and materializing programs coexist.
+        assert attn in ("auto", "flash"), attn
+        if attn == "flash" or getattr(cfg, "attn_impl", "auto") == "flash":
+            self.attn = "flash"
+            cfg = dataclasses.replace(cfg, attn_impl="flash")
+        else:
+            self.attn = "auto"
         self.cfg = cfg
         self.params = params
         self.method = method
@@ -288,9 +309,12 @@ class ExplainEngine:
         )
         self.sigma = sigma if sigma else self._spec.sigma_default
         self.sample_seed = sample_seed
-        self.model = Model(cfg)
+        self.model = model_for(cfg)
         self.stats = EngineStats()
         self._cache: dict[tuple, Any] = {}  # key -> compiled executable
+        # model fns rebuilt at tuned attention block sizes (flash only):
+        # (attn_block_q, attn_block_k) -> target_logprob_at_fn closure
+        self._attn_fns: dict[tuple[int, int], Any] = {}
         # the compiled per-row unit: expansion stripped (row_spec) — the
         # engine samples the ensemble itself at batch-construction time
         self._explainer = Explainer(
@@ -335,15 +359,36 @@ class ExplainEngine:
         if self._autotune_cache is not None:
             tuned = self._autotune_cache.config_for(
                 bucket_key(bucket, self._spec.accum, self.schedule, self.m,
-                           self.n_int, self.fused)
+                           self.n_int, self.fused, attn=self.attn)
             )
             if tuned is not None:
                 return tuned
         return HotpathConfig(self.chunk)
 
+    def _f_for(self, cfg: HotpathConfig):
+        """The model function at one tuned config's attention block sizes.
+
+        Flash models bake (attn_block_q, attn_block_k) into the differentiated
+        function itself, so tuned attention blocks need a rebuilt closure —
+        cached per block pair; (0, 0) and non-flash engines reuse the
+        construction-time function.
+        """
+        blocks = (cfg.attn_block_q, cfg.attn_block_k)
+        if self.attn != "flash" or blocks == (0, 0):
+            return self._explainer.f
+        if blocks not in self._attn_fns:
+            mcfg = dataclasses.replace(
+                self.cfg, attn_block_q=blocks[0], attn_block_k=blocks[1]
+            )
+            self._attn_fns[blocks] = model_for(mcfg).target_logprob_at_fn(
+                self.params
+            )
+        return self._attn_fns[blocks]
+
     def _explainer_at(self, cfg: HotpathConfig) -> Explainer:
         return replace(
-            self._explainer, chunk=cfg.chunk, **self._kernel_kwargs(cfg)
+            self._explainer, f=self._f_for(cfg), chunk=cfg.chunk,
+            **self._kernel_kwargs(cfg)
         )
 
     def _attr_fn_at(self, cfg: HotpathConfig):
@@ -365,7 +410,7 @@ class ExplainEngine:
         # and untuned entries never alias
         return (bucket, self._spec.accum, self.schedule, self.m, self.n_int,
                 self._cfg_for(bucket), self.fused, self.use_kernels,
-                self._mesh_key)
+                self.attn, self._mesh_key)
 
     def _start_fn(self, embeds, baseline, aux, mask):
         """Adaptive rung 0: fused probe + base schedule + resumable stage 2.
@@ -466,13 +511,27 @@ class ExplainEngine:
             "pos": jnp.asarray(bb.lens - 1, jnp.int32),
         }
         mask = jnp.asarray(bb.mask)
-        embeds = self.model.embed_inputs(self.params, {"tokens": tokens})
-        # PAD-token embedding, not zeros: RMSNorm backbones are scale-
-        # invariant through their first norm, so a ray through the origin
-        # has (near-)zero gradient a.e. and completeness can never converge.
-        baseline = pad_embedding(
-            self.params["embed"]["embedding"], embeds, pad_id=self.pad_id
-        )
+        if bb.features is not None:
+            # feature-space requests (ViT patches): the IG path interpolates
+            # embedded features toward the embedded BLACK image (an affine
+            # patch projection maps the paper's pixel-space straight line to
+            # exactly this embedding-space line; the bias+posemb offset is
+            # shared, so it is off-path-direction and the baseline gradient
+            # is non-degenerate — unlike a zero embedding)
+            feats = jnp.asarray(bb.features)
+            embeds = self.model.embed_features(self.params, feats)
+            baseline = self.model.embed_features(
+                self.params, jnp.zeros_like(feats)
+            )
+        else:
+            embeds = self.model.embed_inputs(self.params, {"tokens": tokens})
+            # PAD-token embedding, not zeros: RMSNorm backbones are scale-
+            # invariant through their first norm, so a ray through the origin
+            # has (near-)zero gradient a.e. and completeness can never
+            # converge.
+            baseline = pad_embedding(
+                self.params["embed"]["embedding"], embeds, pad_id=self.pad_id
+            )
         if self._spec.expand is not None:
             # path-ensemble perturbation in embedding space: rows are already
             # replicated requests (see explain()), so each row draws its own
@@ -543,7 +602,8 @@ class ExplainEngine:
         chunk = self._explainer.adaptive_chunk
         args = self._bucket_inputs(bb)
         key = ("start", bb.bucket, self._spec.accum, self.schedule, self.m,
-               self.n_int, chunk, self.fused, self.use_kernels, self._mesh_key)
+               self.n_int, chunk, self.fused, self.use_kernels, self.attn,
+               self._mesh_key)
         bs = self.stats.bucket(bb.bucket)
         ex = self._executable(key, bs, self._start_fn, args)
         res, state, sched = self._timed_call(bs, ex, args)
@@ -601,7 +661,7 @@ class ExplainEngine:
                 ig.IGState(acc_act[pad_sel], f_x[rows], f_b[rows]),
             )
             hop_key = ("hop", hop_bucket, self._spec.accum, n_new, chunk,
-                       self.fused, self.use_kernels, self._mesh_key)
+                       self.fused, self.use_kernels, self.attn, self._mesh_key)
             hbs = self.stats.hop_bucket(hop_bucket)
             # the IGState (arg 5) is donated: escalation reuses the (B, *F)
             # f32 accumulator buffer in place instead of copying each rung
