@@ -1,0 +1,261 @@
+"""Mixed-serving gate (ISSUE 8) -> results/BENCH_mixed.json.
+
+One ``MixedScheduler`` serves generate AND explain traffic over one
+``ExplainEngine`` and four claims are gated:
+
+  1. **bit-identity** — a generate request with ``explain=True`` attributes
+     its prompt toward the first emitted token by donating the decode
+     prefill's chosen-token log-prob as the stage-1 endpoint ``f(x)``. At
+     ``compute_dtype=float32`` the resulting attribution must be BITWISE
+     equal (``np.array_equal`` on token_scores, exact-equal delta / f_x /
+     f_baseline and identical ``m_used``/``hops``/``converged`` traces) to
+     the standalone ``ExplainEngine.explain`` path that re-runs the probe
+     forward itself.
+  2. **zero steady-state recompiles** — replaying the identical mixed
+     workload after warmup must not grow ``engine.stats.misses``. Decode
+     executables (prefill / chunk) and explain executables (start / hop)
+     are ONE combined set: mixed traffic reuses the hop executables that
+     standalone explain traffic warmed, and vice versa.
+  3. **δ-aware preemption** — with adaptive escalation hops queued, a newly
+     submitted interactive generate request dispatches AHEAD of them
+     (``engine.stats.preempted`` > 0) and still completes.
+  4. **SLO under stragglers** — with injected stragglers (and one poisoned
+     request) on the explain path, interactive decode p99 stays within a
+     structural bound of the decode-only baseline: hops are the lowest
+     -priority items, so decode can wait behind at most the one explain
+     item already executing, never the whole escalation backlog. The
+     straggler monitor must flag the slow items and ONLY the poisoned
+     request may degrade.
+
+Everything runs at ``compute_dtype=float32`` — the donated-endpoint
+contract is bit-exact there and NOT at bf16 (docs/serving.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+# SLO gate slack: the structural claim is "decode waits behind at most one
+# in-flight explain item"; 2 injected-sleep units plus a CI-noise pad bound
+# that without gating raw wall-clock
+STRAGGLER_S = 0.25
+SLO_PAD_S = 1.0
+
+
+def _p99(tickets) -> float:
+    return float(np.percentile([t.latency_s for t in tickets], 99))
+
+
+def run(
+    *,
+    arch: str = "llama3-8b",
+    requests: int = 6,
+    gen_tokens: int = 3,
+    m: int = 8,
+    n_int: int = 4,
+    tol: float = 1e-3,
+    smoke: bool = False,
+    seed: int = 0,
+) -> dict:
+    from repro.configs import ARCHS, reduced
+    from repro.models.registry import Model
+    from repro.runtime.fault import FaultConfig, StragglerMonitor
+    from repro.serve import (
+        INTERACTIVE,
+        ExplainEngine,
+        ExplainRequest,
+        GenerateRequest,
+        MixedScheduler,
+    )
+
+    if smoke:
+        requests, gen_tokens, m = 4, 2, 8
+    # bit-exactness of the donated endpoint needs f32 compute (docs/serving.md)
+    cfg = dataclasses.replace(reduced(ARCHS[arch]), compute_dtype="float32")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    engine = ExplainEngine(
+        cfg, params, m=m, n_int=n_int, seq_buckets=(8, 16, 32),
+        adaptive=True, tol=tol, m_max=4 * m,
+    )
+    sched = MixedScheduler(engine, max_len=16, decode_chunk=2)
+    rng = np.random.default_rng(seed)
+    prompts = [
+        rng.integers(1, cfg.vocab_size, 5 + (i % 3)).astype(np.int32)
+        for i in range(requests)
+    ]
+
+    out = {
+        "arch": arch, "requests": requests, "gen_tokens": gen_tokens,
+        "m": m, "n_int": n_int, "tol": tol, "smoke": smoke,
+        "device_kind": jax.devices()[0].device_kind, "gates": {},
+    }
+    failures: list[str] = []
+
+    def submit_workload():
+        tickets = []
+        for p in prompts:
+            tickets.append(sched.submit(GenerateRequest(
+                tokens=p, num_tokens=gen_tokens, explain=True, slo=INTERACTIVE,
+            )))
+        sched.run_until_idle()
+        return tickets
+
+    # -- gate 1: donated-endpoint bit-identity vs the standalone engine ------
+    t0 = time.perf_counter()
+    tickets = submit_workload()
+    out["warmup_wall_s"] = time.perf_counter() - t0
+    standalone = engine.explain([
+        ExplainRequest(tokens=p, target=int(t.tokens[0]))
+        for p, t in zip(prompts, tickets)
+    ])
+    mismatches = []
+    for i, (t, ref) in enumerate(zip(tickets, standalone)):
+        got = next(a for a in t.attributions if a["pos"] == 0)
+        checks = {
+            "token_scores": np.array_equal(got["token_scores"], ref["token_scores"]),
+            "delta": got["delta"] == ref["delta"],
+            "f_x": got["f_x"] == ref["f_x"],
+            "f_baseline": got["f_baseline"] == ref["f_baseline"],
+            "m_used": got["m_used"] == ref["m_used"],
+            "hops": got["hops"] == ref["hops"],
+            "converged": got["converged"] == ref["converged"],
+        }
+        if not all(checks.values()):
+            mismatches.append((i, [k for k, v in checks.items() if not v]))
+    out["gates"]["bit_identical"] = not mismatches
+    out["traces"] = [
+        {"m_used": r["m_used"], "hops": r["hops"], "converged": r["converged"]}
+        for r in standalone
+    ]
+    if mismatches:
+        failures.append(f"donated-endpoint attribution diverges: {mismatches}")
+    if any(t.status != "done" for t in tickets):
+        failures.append(
+            f"warmup statuses {[t.status for t in tickets]} not all done"
+        )
+
+    # -- gate 2: zero steady-state recompiles across the combined set --------
+    misses0 = engine.stats.misses
+    t0 = time.perf_counter()
+    submit_workload()
+    out["replay_wall_s"] = time.perf_counter() - t0
+    recompiles = engine.stats.misses - misses0
+    out["steady_state_recompiles"] = recompiles
+    out["gates"]["zero_recompiles"] = recompiles == 0
+    if recompiles:
+        failures.append(f"steady-state replay recompiled {recompiles}x")
+
+    # -- gate 3: escalation hops are preemptible — decode dispatches first ---
+    preempted0 = engine.stats.preempted
+    sched.submit(ExplainRequest(tokens=prompts[0], target=7))
+    while not any(k == "hop" for _, _, k, _ in sched._heap):
+        if not sched.step():
+            break
+    hop_was_queued = any(k == "hop" for _, _, k, _ in sched._heap)
+    t_gen = sched.submit(GenerateRequest(
+        tokens=prompts[1], num_tokens=2, slo=INTERACTIVE,
+    ))
+    sched.run_until_idle()
+    out["preempted"] = engine.stats.preempted - preempted0
+    out["gates"]["preemption"] = (
+        hop_was_queued and out["preempted"] > 0 and t_gen.status == "done"
+    )
+    if not out["gates"]["preemption"]:
+        failures.append(
+            f"preemption gate: hop_queued={hop_was_queued} "
+            f"preempted={out['preempted']} gen={t_gen.status}"
+        )
+
+    # -- gate 4: decode SLO holds under injected explain stragglers ----------
+    # decode-only baseline on the warmed scheduler
+    base_tickets = [
+        sched.submit(GenerateRequest(tokens=p, num_tokens=gen_tokens,
+                                     slo=INTERACTIVE))
+        for p in prompts
+    ]
+    sched.run_until_idle()
+    p99_base = _p99(base_tickets)
+
+    # fresh monitor so its EWMA reflects warmed steady-state walls, not the
+    # compile-phase seconds-scale items it warmed up on
+    sched.monitor = StragglerMonitor(FaultConfig())
+    # poisoned request gets a unique (·, 16) bucket: every attempt on that
+    # bucket's explain items fails, so ONLY it degrades
+    poison_prompt = rng.integers(1, cfg.vocab_size, 12).astype(np.int32)
+
+    def hook(kind, payload):
+        if kind in ("exp_start", "hop", "exp_fixed"):
+            bucket = payload.bb.bucket if hasattr(payload, "bb") else payload.bucket
+            if bucket[1] == 16:
+                raise RuntimeError("injected poison")
+            time.sleep(STRAGGLER_S)
+
+    sched.fault_hook = hook
+    degraded0 = engine.stats.degraded
+    exp_tickets = [
+        sched.submit(ExplainRequest(tokens=p, target=3)) for p in prompts[:3]
+    ]
+    t_poison = sched.submit(ExplainRequest(tokens=poison_prompt, target=3))
+    slo_tickets = [
+        sched.submit(GenerateRequest(tokens=p, num_tokens=gen_tokens,
+                                     slo=INTERACTIVE))
+        for p in prompts
+    ]
+    sched.run_until_idle()
+    sched.fault_hook = None
+    p99_mixed = _p99(slo_tickets)
+    out["slo"] = {
+        "p99_decode_only_s": p99_base,
+        "p99_mixed_straggler_s": p99_mixed,
+        "bound_s": p99_base + 2 * STRAGGLER_S + SLO_PAD_S,
+        "stragglers_flagged": len(sched.monitor.flagged),
+        "degraded": engine.stats.degraded - degraded0,
+    }
+    ok_slo = p99_mixed <= out["slo"]["bound_s"]
+    ok_flag = len(sched.monitor.flagged) > 0
+    ok_degrade = (
+        t_poison.status == "degraded"
+        and all(t.status == "done" for t in exp_tickets)
+        and all(t.status == "done" for t in slo_tickets)
+        and engine.stats.degraded > degraded0
+    )
+    out["gates"]["slo_under_stragglers"] = ok_slo
+    out["gates"]["stragglers_flagged"] = ok_flag
+    out["gates"]["degrade_only_affected"] = ok_degrade
+    if not ok_slo:
+        failures.append(
+            f"interactive p99 {p99_mixed:.3f}s exceeds bound "
+            f"{out['slo']['bound_s']:.3f}s (decode-only {p99_base:.3f}s)"
+        )
+    if not ok_flag:
+        failures.append("straggler monitor flagged nothing under injection")
+    if not ok_degrade:
+        failures.append(
+            f"degradation gate: poison={t_poison.status} "
+            f"others={[t.status for t in exp_tickets + slo_tickets]}"
+        )
+
+    out["latency_summary"] = sched.latency_summary()
+    out["failures"] = failures
+    out["pass"] = not failures
+    print(
+        f"mixed_serving bit_identical={out['gates']['bit_identical']} "
+        f"recompiles={recompiles} preempted={out['preempted']} "
+        f"p99 {p99_base:.3f}s -> {p99_mixed:.3f}s "
+        f"flagged={out['slo']['stragglers_flagged']} pass={out['pass']}"
+    )
+    if failures:
+        print(f"mixed_serving failures: {failures}")
+    return out
+
+
+def main():
+    run(smoke=True)
+
+
+if __name__ == "__main__":
+    main()

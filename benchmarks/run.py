@@ -13,6 +13,10 @@ Order:
   attention    — beyond-paper (--attention): flash custom-VJP vs
                  materializing attention on LM + ViT traffic
                  -> results/BENCH_attention.json
+  mixed        — beyond-paper (--mixed): unified generate+explain serving
+                 (donated-endpoint bit-identity, zero-recompile replay,
+                 hop preemption, SLO under stragglers)
+                 -> results/BENCH_mixed.json
   lm_convergence — beyond-paper: NUIG on the assigned LM families
   roofline     — §Roofline table from the dry-run artifacts
 
@@ -91,6 +95,14 @@ def main() -> int:
         "(with --smoke: the CI-sized config)",
     )
     ap.add_argument(
+        "--mixed",
+        action="store_true",
+        help="mixed-serving gate only (unified generate+explain scheduler: "
+        "donated-endpoint bit-identity, zero-recompile replay, hop "
+        "preemption, decode SLO under injected stragglers) "
+        "-> results/BENCH_mixed.json (with --smoke: the CI-sized config)",
+    )
+    ap.add_argument(
         "--attention",
         action="store_true",
         help="attention hot-path gate only (flash custom-VJP vs materializing "
@@ -130,6 +142,22 @@ def main() -> int:
             "pass": out["pass"],
         })
         print(f"# hotpath bench -> {path}")
+        return 0 if out["pass"] else 1
+
+    if args.mixed:
+        from benchmarks import mixed_serving
+
+        out = mixed_serving.run(smoke=args.smoke)
+        path = _write("BENCH_mixed.json", out)
+        _trajectory("mixed", {
+            "smoke": args.smoke,
+            "gates": out["gates"],
+            "steady_state_recompiles": out["steady_state_recompiles"],
+            "p99_decode_only_s": out["slo"]["p99_decode_only_s"],
+            "p99_mixed_straggler_s": out["slo"]["p99_mixed_straggler_s"],
+            "pass": out["pass"],
+        })
+        print(f"# mixed-serving bench -> {path}")
         return 0 if out["pass"] else 1
 
     if args.attention:

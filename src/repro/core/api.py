@@ -166,12 +166,15 @@ class Explainer:
         baseline: jax.Array,
         target: Any,
         mask: Optional[jax.Array] = None,
+        f_x: Optional[jax.Array] = None,
     ) -> Schedule:
         """Stage 1 (probe) + step allocation, dispatched via the registry.
 
         Every family (refine included) rides the same path: run the probe
         its ``ScheduleFamily.probe`` spec names, hand the result to its
-        uniform-signature builder. Probe cost: n_int+1 (+rounds) forwards.
+        uniform-signature builder. Probe cost: n_int+1 (+rounds) forwards,
+        minus one when ``f_x`` donates the α=1 endpoint (probe-reuse
+        contract — see ``probes.boundary_values``).
         """
         fam = schedules.family(self.schedule)
         probe = probes.run_probe(
@@ -183,6 +186,7 @@ class Explainer:
             n_int=self.n_int,
             rounds=self.refine_rounds,
             mask=mask,
+            known_fx=f_x,
         )
         return fam.build(
             probe, self.m, power=self.power, min_steps=self.min_steps, rule=self.rule
@@ -194,6 +198,7 @@ class Explainer:
         baseline: jax.Array,
         target: Any,
         mask: Optional[jax.Array] = None,
+        f_x: Optional[jax.Array] = None,
     ) -> IGResult:
         """Fixed-m attribution: stage-1 probe + stage-2 accumulation.
 
@@ -203,13 +208,20 @@ class Explainer:
                 (``None`` if ``f`` ignores it).
             mask: optional (B, *L) real-position mask — masked positions
                 interpolate to the baseline and attribute exactly 0.
+            f_x: optional (B,) known endpoint values f(x) — the probe-reuse
+                contract (unified serving): the α=1 probe slot and the
+                completeness endpoint reuse this value instead of re-running
+                the forward. Dropped for path-ensemble methods (samples
+                perturb x, so the passed value is for the wrong point).
 
         Returns:
             ``IGResult(attributions (B, *F), f_x, f_baseline, delta)`` where
             ``delta`` is the completeness gap |Σφ − (f_x − f_baseline)|.
         """
         x2, b2, t2, m2, n = self.expand_inputs(x, baseline, target, mask)
-        sched = self.build_schedule(x2, b2, t2, m2)
+        if n != 1:
+            f_x = None  # ensemble rows are perturbed — the endpoint moved
+        sched = self.build_schedule(x2, b2, t2, m2, f_x=f_x)
         res = ig.attribute(
             self.f,
             x2,
@@ -219,6 +231,7 @@ class Explainer:
             method=self.spec,
             mask=m2,
             chunk=self.chunk,
+            f_x=f_x,
             **self._ig_kwargs(),
         )
         return self.reduce_result(res, n)
@@ -259,16 +272,21 @@ class Explainer:
         baseline: jax.Array,
         target: Any,
         mask: Optional[jax.Array] = None,
+        f_x: Optional[jax.Array] = None,
     ) -> tuple[IGResult, IGState, Schedule]:
         """Rung 0 of the adaptive ladder: probe, build the base schedule,
         accumulate its m nodes, and return the resumable state plus the
         materialized schedule (needed to refine later).
 
+        ``f_x`` donates the known endpoint (probe-reuse contract, see
+        ``attribute``); the returned ``IGState`` carries it, so every later
+        ladder hop is unchanged whether the endpoint was donated or computed.
+
         Per-ROW, never expanded: the serving engine (and the adaptive loop
         below) performs path-ensemble expansion itself at batch-construction
         time, so this compiled unit stays method-independent up to the
         accumulator class (DESIGN.md §8)."""
-        sched = self.build_schedule(x, baseline, target, mask)
+        sched = self.build_schedule(x, baseline, target, mask, f_x=f_x)
         res, state = ig.attribute(
             self.f,
             x,
@@ -279,6 +297,7 @@ class Explainer:
             mask=mask,
             chunk=self.adaptive_chunk,
             return_state=True,
+            f_x=f_x,
             **self._ig_kwargs(),
         )
         return res, state, sched

@@ -80,6 +80,7 @@ def attribute(
     state: Optional[IGState] = None,
     state_scale: float = 1.0,
     return_state: bool = False,
+    f_x: Optional[jax.Array] = None,
 ):
     """Path attribution along the straight line with any schedule + method.
 
@@ -111,6 +112,14 @@ def attribute(
     paths accumulate in f32 either way and agree to float tolerance (not
     bitwise — the weight multiply rides the VJP seed instead of the
     accumulator); each is separately bit-identical under adaptive resume.
+
+    Probe-reuse (``f_x``, unified serving): a caller that already holds the
+    endpoint forward value f(x) for every row — e.g. the decode loop's chosen
+    -token log-prob from the very forward being attributed — passes it here
+    and only f(baseline) is computed (a B-row batch instead of 2B). Per-row
+    forward values are batch-shape independent, so the result is bit-identical
+    to the self-computed endpoints whenever the passed value is. Ignored when
+    resuming from ``state`` (endpoints already live there).
 
     Resumability (DESIGN.md §7): pass ``state`` from a prior call to continue
     accumulating — ``sched`` then holds only the NEW nodes, the endpoint
@@ -197,12 +206,15 @@ def attribute(
     acc, _ = jax.lax.scan(step, acc0, (a_ch, w_ch))
     attr = spec.finalize(acc, xp, baseline, mask)
 
-    if state is None:
+    if state is not None:
+        f_x, f_b = state.f_x, state.f_baseline
+    elif f_x is not None:
+        f_x = f_x.astype(jnp.float32)
+        f_b = f(baseline, target)
+    else:
         both = jnp.concatenate([xp, baseline], axis=0)
         fv = f(both, jax.tree.map(lambda t: jnp.concatenate([t, t], axis=0), target))
         f_x, f_b = fv[:B], fv[B:]
-    else:
-        f_x, f_b = state.f_x, state.f_baseline
     # attr is exactly zero at masked positions, so the full sum IS the
     # real-token sum — δ measures completeness over real tokens only.
     delta = jnp.abs(attr.reshape(B, -1).sum(-1) - (f_x - f_b))

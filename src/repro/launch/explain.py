@@ -79,6 +79,9 @@ def report(engine: ExplainEngine) -> None:
     st = engine.stats
     print(f"  executable cache: hits={st.hits} misses={st.misses} "
           f"hit_rate={st.hit_rate:.2f}")
+    if st.degraded or st.preempted or st.queue_depth:
+        print(f"  scheduler: degraded={st.degraded} preempted={st.preempted} "
+              f"queue_depth={st.queue_depth}")
     if engine.mesh is not None:
         print(f"  mesh: {dict(zip(engine.mesh.axis_names, engine.mesh.devices.shape))} "
               f"dp={engine.dp} mesh_fallbacks={st.mesh_fallbacks}")
@@ -175,6 +178,21 @@ def main() -> int:
         "--host-devices", type=int, default=0,
         help="force N virtual CPU devices (multi-device demo on one host)",
     )
+    ap.add_argument(
+        "--scheduler", action="store_true",
+        help="route traffic through the MixedScheduler admission queue "
+        "(bounded, per-tenant rate limits — docs/serving.md); prints "
+        "backpressure/rate rejections and degradation counters",
+    )
+    ap.add_argument(
+        "--max-queue", type=int, default=64,
+        help="scheduler queue bound (with --scheduler)",
+    )
+    ap.add_argument(
+        "--tenant-rate", type=float, default=0.0,
+        help="per-tenant token-bucket refill rate in req/s "
+        "(0 = unlimited; with --scheduler)",
+    )
     args = ap.parse_args()
 
     mesh = None
@@ -251,6 +269,19 @@ def main() -> int:
             + (" autotuned" if args.autotune else "")
         print(f"method={args.method} schedule={sched_name} {mode}{samples}{flags} "
               f"traffic={args.rounds}x{args.requests} reqs S∈[{args.min_seq},{args.max_seq}]")
+        sched = None
+        if args.scheduler and engine.n_samples == 1:
+            from repro.serve import MixedScheduler, TenantPolicy
+
+            tenants = (
+                {"default": TenantPolicy(rate=args.tenant_rate)}
+                if args.tenant_rate
+                else None
+            )
+            sched = MixedScheduler(engine, max_queue=args.max_queue, tenants=tenants)
+        elif args.scheduler:
+            print("note: --scheduler serves per-row methods only; "
+                  f"{args.method} (n_samples={engine.n_samples}) runs direct")
         for rnd in range(args.rounds):
             reqs = (
                 fixed_reqs
@@ -258,14 +289,27 @@ def main() -> int:
                 else make_traffic(cfg, args.requests, args.min_seq, args.max_seq, rng)
             )
             t0 = time.perf_counter()
-            out = engine.explain(reqs)
+            if sched is not None:
+                tickets = [sched.submit(r) for r in reqs]
+                sched.run_until_idle()
+                out = [t.result for t in tickets if t.result is not None]
+                rej = sum(t.status.startswith("rejected") for t in tickets)
+                if rej:
+                    print(f"  round {rnd}: {rej} rejected "
+                          f"(backpressure={sched.rejected_backpressure} "
+                          f"rate={sched.rejected_rate})")
+                if not out:
+                    print(f" round {rnd}: all {len(reqs)} requests rejected")
+                    continue
+            else:
+                out = engine.explain(reqs)
             wall = time.perf_counter() - t0
             deltas = [o["delta"] for o in out]
             line = (f" round {rnd}: wall={wall:.2f}s mean_delta={np.mean(deltas):.5f} "
                     f"max_delta={np.max(deltas):.5f}")
             if args.adaptive:
-                line += (f" mean_m_used={np.mean([o['m_used'] for o in out]):.1f}"
-                         f" conv={sum(o['converged'] for o in out)}/{len(out)}")
+                line += (f" mean_m_used={np.mean([o.get('m_used', 0) for o in out]):.1f}"
+                         f" conv={sum(o.get('converged', False) for o in out)}/{len(out)}")
             print(line)
         report(engine)
     scores = np.asarray(out[0]["token_scores"])

@@ -37,6 +37,13 @@ class FaultConfig:
     backoff_cap_s: float = 30.0
     straggler_threshold: float = 2.0
     straggler_ewma: float = 0.9
+    # EWMA seed warmup: the mean seeds from the MEDIAN of the first k
+    # observations instead of the first one alone — step 0 is typically a
+    # cold-compile step (10–100× steady state) and, because stragglers never
+    # update the mean, a first-step seed would leave the monitor blind for
+    # the whole run (every steady-state step looks "fast", no straggler can
+    # ever exceed threshold × the inflated mean).
+    straggler_warmup: int = 3
 
 
 class RetryPolicy:
@@ -61,18 +68,28 @@ class RetryPolicy:
 
 
 class StragglerMonitor:
-    """EWMA of step wall-time; ``observe`` returns True for straggler steps."""
+    """EWMA of step wall-time; ``observe`` returns True for straggler steps.
+
+    The first ``cfg.straggler_warmup`` observations are warmup: they are
+    collected but never flagged, and the EWMA mean seeds from their MEDIAN.
+    A first-observation seed would let a cold-compile step (10–100× steady
+    state) poison the mean permanently — stragglers never update the mean,
+    so every later step would look fast and the monitor would stay blind.
+    """
 
     def __init__(self, cfg: FaultConfig):
         self.cfg = cfg
         self.mean: Optional[float] = None
         self.flagged: list[int] = []
         self._step = 0
+        self._warm: list[float] = []
 
     def observe(self, wall_s: float) -> bool:
         self._step += 1
         if self.mean is None:
-            self.mean = wall_s
+            self._warm.append(wall_s)
+            if len(self._warm) >= max(self.cfg.straggler_warmup, 1):
+                self.mean = float(np.median(self._warm))
             return False
         is_straggler = wall_s > self.cfg.straggler_threshold * self.mean
         if is_straggler:
@@ -175,9 +192,12 @@ def run_with_recovery(
                 restored_step, restored = ckpt_manager.restore_latest(state)
                 if restored_step is not None:
                     # roll back and REPLAY: the deterministic pipeline
-                    # re-serves identical batches for the replayed steps
+                    # re-serves identical batches for the replayed steps.
+                    # The checkpoint may predate start_step (a manager shared
+                    # across drivers): clamp the history cut to 0 — a negative
+                    # slice would silently KEEP the wrong suffix.
                     state = restored
-                    history = history[: restored_step - start_step]
+                    history = history[: max(restored_step - start_step, 0)]
                     step = restored_step
             continue
         failures = 0

@@ -1,7 +1,29 @@
-from repro.serve.engine import ServeEngine, make_serve_step, make_prefill_step
-from repro.serve.explain_engine import EngineStats, ExplainEngine, ExplainRequest
+from repro.serve.engine import (
+    ServeEngine,
+    make_decode_chunk,
+    make_decode_loop,
+    make_prefill_step,
+    make_serve_step,
+    sample_token,
+)
+from repro.serve.explain_engine import (
+    AdaptiveBucketRun,
+    EngineStats,
+    ExplainEngine,
+    ExplainRequest,
+)
 from repro.serve.explain_service import ExplainService
 from repro.serve.batching import BucketBatch, bucket_for, plan_buckets, pow2_ladder
+from repro.serve.scheduler import (
+    BATCH,
+    EXPLAIN,
+    INTERACTIVE,
+    GenerateRequest,
+    MixedScheduler,
+    SLOClass,
+    TenantPolicy,
+    Ticket,
+)
 from repro.serve.autotune import (
     AutotuneCache,
     HotpathConfig,
@@ -14,14 +36,26 @@ __all__ = [
     "ServeEngine",
     "make_serve_step",
     "make_prefill_step",
+    "make_decode_loop",
+    "make_decode_chunk",
+    "sample_token",
     "ExplainEngine",
     "EngineStats",
     "ExplainService",
     "ExplainRequest",
+    "AdaptiveBucketRun",
     "BucketBatch",
     "bucket_for",
     "plan_buckets",
     "pow2_ladder",
+    "MixedScheduler",
+    "GenerateRequest",
+    "Ticket",
+    "SLOClass",
+    "TenantPolicy",
+    "INTERACTIVE",
+    "BATCH",
+    "EXPLAIN",
     "AutotuneCache",
     "HotpathConfig",
     "autotune_engine",

@@ -84,6 +84,12 @@ class BucketBatch(NamedTuple):
     # feature-space requests (e.g. ViT patch features): (B, S, *F) float32,
     # zero-padded; None for token-only traffic
     features: Optional[np.ndarray] = None
+    # known endpoint values f(x) donated by the decode path (probe-reuse
+    # contract, DESIGN.md §11): (B,) float32, pad rows repeating a real row;
+    # None when the engine must compute the endpoint itself. Requests with
+    # and without a known endpoint never share a bucket (different compiled
+    # probe signatures), so ``plan_buckets`` groups by (S, has_fx).
+    f_x: Optional[np.ndarray] = None
 
 
 def plan_buckets(
@@ -107,13 +113,15 @@ def plan_buckets(
     data-parallel extent (mesh-divisible padding, DESIGN.md §9) so sharded
     engines never fall back to replication.
     """
-    groups: dict[int, list[int]] = {}
+    groups: dict[tuple[int, bool], list[int]] = {}
     for i, r in enumerate(requests):
-        groups.setdefault(bucket_for(len(r.tokens), seq_buckets), []).append(i)
+        has_fx = getattr(r, "f_x", None) is not None
+        key = (bucket_for(len(r.tokens), seq_buckets), has_fx)
+        groups.setdefault(key, []).append(i)
 
     out: list[BucketBatch] = []
-    for S in sorted(groups):
-        idx = groups[S]
+    for S, has_fx in sorted(groups):
+        idx = groups[(S, has_fx)]
         step = max_batch if max_batch else len(idx)
         if batch_buckets:
             step = min(step, max(batch_buckets))  # never outgrow the ladder
@@ -125,6 +133,7 @@ def plan_buckets(
             targets = np.empty((B,), np.int32)
             mask = np.zeros((B, S), np.float32)
             features = None
+            fx = np.empty((B,), np.float32) if has_fx else None
             has_feat = getattr(requests[padded_rows[0]], "features", None) is not None
             for j, ri in enumerate(padded_rows):
                 t = np.asarray(requests[ri].tokens, np.int32)
@@ -132,6 +141,8 @@ def plan_buckets(
                 lens[j] = len(t)
                 targets[j] = int(requests[ri].target)
                 mask[j, : len(t)] = 1.0
+                if has_fx:
+                    fx[j] = float(requests[ri].f_x)
                 f = getattr(requests[ri], "features", None)
                 if (f is not None) != has_feat:
                     raise ValueError(
@@ -143,6 +154,8 @@ def plan_buckets(
                         features = np.zeros((B, S) + f.shape[1:], np.float32)
                     features[j, : f.shape[0]] = f
             out.append(
-                BucketBatch((B, S), tuple(rows), tokens, lens, targets, mask, features)
+                BucketBatch(
+                    (B, S), tuple(rows), tokens, lens, targets, mask, features, fx
+                )
             )
     return out

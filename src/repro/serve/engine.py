@@ -7,6 +7,15 @@ drives them for real batched generation (examples/serve_lm.py).
 The cache is fully static-shape (max_len fixed at engine construction);
 decode_32k lowers one new token against a seq_len cache, exactly as the
 assignment specifies.
+
+Decoding modes: ``greedy=True`` (the default everywhere) is argmax;
+``greedy=False`` is temperature/categorical sampling and requires an explicit
+PRNG key — the step/loop signatures grow a ``key`` argument so sampling can
+never silently fall back to argmax. ``make_decode_chunk`` is the unified
+serving path's unit (``repro.serve.scheduler``): a fixed-length scanned chunk
+that also emits each chosen token's log-probability, which is exactly the
+stage-1 probe endpoint ``f(x)`` an attached explain request needs — the
+decode forward pays for it once and the explain path reuses it.
 """
 from __future__ import annotations
 
@@ -30,44 +39,136 @@ def make_prefill_step(cfg: ArchConfig, max_len: int, *, kv_slots: int = 0) -> Ca
     return prefill_step
 
 
+def sample_token(
+    logits: jax.Array, key: jax.Array, temperature: jax.Array
+) -> jax.Array:
+    """(B, V) logits -> (B,) sampled ids at ``temperature`` (runtime scalar).
+
+    The temperature rides the program as data, so one compiled sampler serves
+    every temperature; ``temperature`` must be > 0 (greedy is its own step).
+    """
+    lg = logits.astype(jnp.float32) / temperature.astype(jnp.float32)
+    return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)
+
+
 def make_serve_step(cfg: ArchConfig, *, greedy: bool = True) -> Callable:
-    """(params, cache, token (B,1)) -> (next_token (B,1), cache)."""
+    """Decode-step builder.
+
+    greedy=True:  (params, cache, token (B,1)) -> (next (B,1), cache) — argmax.
+    greedy=False: (params, cache, token (B,1), key, temperature) ->
+                  (next (B,1), cache) — categorical sampling. The explicit
+                  key/temperature arguments are the fix for the historical
+                  bug where ``greedy=False`` silently served argmax.
+    """
     model = Model(cfg)
 
-    def serve_step(params: Any, cache: dict, token: jax.Array) -> tuple[jax.Array, dict]:
+    if greedy:
+
+        def serve_step(params: Any, cache: dict, token: jax.Array) -> tuple[jax.Array, dict]:
+            logits, cache = model.decode_step(params, cache, token)
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+            return nxt, cache
+
+        return serve_step
+
+    def sample_step(
+        params: Any, cache: dict, token: jax.Array, key: jax.Array,
+        temperature: jax.Array,
+    ) -> tuple[jax.Array, dict]:
         logits, cache = model.decode_step(params, cache, token)
-        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        nxt = sample_token(logits[:, -1], key, temperature)[:, None]
         return nxt, cache
 
-    return serve_step
+    return sample_step
 
 
-def make_decode_loop(cfg: ArchConfig) -> Callable:
-    """(params, cache, token (B,1), num_steps) -> tokens (B, num_steps).
+def make_decode_loop(cfg: ArchConfig, *, greedy: bool = True) -> Callable:
+    """Scanned decode loop; one compiled program per generation length.
+
+    greedy=True:  (params, cache, token (B,1), num_steps) -> tokens (B, n).
+    greedy=False: (params, cache, token (B,1), key, temperature, num_steps)
+                  -> tokens (B, n); step k samples with fold_in(key, k).
 
     ``lax.scan`` over the serve step: one compiled program per generation
     length instead of num_steps host round-trips, with the cache carried
     (and donatable) on-device for the whole loop.
     """
-    step = make_serve_step(cfg)
+    step = make_serve_step(cfg, greedy=greedy)
 
-    def decode_loop(
-        params: Any, cache: dict, token: jax.Array, num_steps: int
+    if greedy:
+
+        def decode_loop(
+            params: Any, cache: dict, token: jax.Array, num_steps: int
+        ) -> jax.Array:
+            def body(carry, _):
+                tok, cache = carry
+                nxt, cache = step(params, cache, tok)
+                return (nxt, cache), nxt
+
+            _, toks = jax.lax.scan(body, (token, cache), None, length=num_steps)
+            return toks[..., 0].swapaxes(0, 1)  # (n, B, 1) -> (B, n)
+
+        return decode_loop
+
+    def sample_loop(
+        params: Any, cache: dict, token: jax.Array, key: jax.Array,
+        temperature: jax.Array, num_steps: int,
     ) -> jax.Array:
-        def body(carry, _):
+        def body(carry, k):
             tok, cache = carry
-            nxt, cache = step(params, cache, tok)
+            nxt, cache = step(params, cache, tok, jax.random.fold_in(key, k), temperature)
             return (nxt, cache), nxt
 
-        _, toks = jax.lax.scan(body, (token, cache), None, length=num_steps)
-        return toks[..., 0].swapaxes(0, 1)  # (n, B, 1) -> (B, n)
+        _, toks = jax.lax.scan(
+            body, (token, cache), jnp.arange(num_steps), length=num_steps
+        )
+        return toks[..., 0].swapaxes(0, 1)
 
-    return decode_loop
+    return sample_loop
+
+
+def make_decode_chunk(cfg: ArchConfig) -> Callable:
+    """The unified serving path's preemptible decode unit.
+
+    (params, cache, token (B,1), key, temperature, num_steps) ->
+        (tokens (B, n), logprobs (B, n), cache)
+
+    One scanned chunk of ``num_steps`` tokens that ALSO emits each chosen
+    token's log-probability — ``log_softmax(logits)[chosen]`` is exactly the
+    explain stage-1 probe endpoint ``f(x)`` for "attribute the prefix toward
+    the emitted token", so explain-as-you-serve traffic never re-runs the
+    forward the decode loop already paid for. ``temperature`` is runtime
+    data; ``temperature <= 0`` selects greedy argmax (via ``lax.cond``-free
+    ``where``), so one compiled chunk serves both modes.
+    """
+    model = Model(cfg)
+
+    def decode_chunk(
+        params: Any, cache: dict, token: jax.Array, key: jax.Array,
+        temperature: jax.Array, num_steps: int,
+    ) -> tuple[jax.Array, jax.Array, dict]:
+        def body(carry, k):
+            tok, cache = carry
+            logits, cache = model.decode_step(params, cache, tok)
+            lg = logits[:, -1].astype(jnp.float32)
+            greedy_tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+            sampled = sample_token(lg, jax.random.fold_in(key, k),
+                                   jnp.maximum(temperature, 1e-6))
+            nxt = jnp.where(temperature > 0, sampled, greedy_tok)
+            lp = jax.nn.log_softmax(lg, axis=-1)[jnp.arange(lg.shape[0]), nxt]
+            return (nxt[:, None], cache), (nxt, lp)
+
+        (_, cache), (toks, lps) = jax.lax.scan(
+            body, (token, cache), jnp.arange(num_steps), length=num_steps
+        )
+        return toks.swapaxes(0, 1), lps.swapaxes(0, 1), cache
+
+    return decode_chunk
 
 
 @dataclass
 class ServeEngine:
-    """Greedy batched generation over a static cache."""
+    """Batched generation over a static cache (greedy or sampled)."""
 
     cfg: ArchConfig
     params: Any
@@ -81,12 +182,43 @@ class ServeEngine:
         self._decode = jax.jit(
             make_decode_loop(self.cfg), static_argnums=(3,), donate_argnums=(1,)
         )
+        self._decode_sampled = jax.jit(
+            make_decode_loop(self.cfg, greedy=False),
+            static_argnums=(5,), donate_argnums=(1,),
+        )
 
-    def generate(self, batch: dict, num_tokens: int) -> jax.Array:
-        """batch: prompt dict -> (B, num_tokens) generated ids (greedy)."""
+    def generate(
+        self,
+        batch: dict,
+        num_tokens: int,
+        *,
+        key: Optional[jax.Array] = None,
+        temperature: float = 1.0,
+    ) -> jax.Array:
+        """batch: prompt dict -> (B, num_tokens) generated ids.
+
+        Greedy argmax decoding by default; pass ``key`` to sample at
+        ``temperature`` instead (the prefill token is sampled too, with
+        ``fold_in(key, 2**32 - 1)`` so it never collides with a loop step key).
+        ``num_tokens <= 0`` generates nothing and returns an empty (B, 0)
+        array — it must NOT emit the free prefill token.
+        """
+        B = batch["tokens"].shape[0]
+        if num_tokens <= 0:
+            return jnp.zeros((B, 0), jnp.int32)
         logits, cache = self._prefill(self.params, batch)
-        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-        if num_tokens <= 1:  # the prefill token is free; scan needs length >= 1
+        lg = logits[:, -1]
+        if key is None:
+            tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)[:, None]
+        else:
+            temp = jnp.asarray(temperature, jnp.float32)
+            tok = sample_token(lg, jax.random.fold_in(key, 2**32 - 1), temp)[:, None]
+        if num_tokens == 1:  # the prefill token is free; scan needs length >= 1
             return tok
-        rest = self._decode(self.params, cache, tok, num_tokens - 1)
+        if key is None:
+            rest = self._decode(self.params, cache, tok, num_tokens - 1)
+        else:
+            rest = self._decode_sampled(
+                self.params, cache, tok, key, temp, num_tokens - 1
+            )
         return jnp.concatenate([tok, rest], axis=1)

@@ -107,6 +107,14 @@ class ExplainRequest:
     # ``models.vit.patchify``; ``tokens`` then only sets the length/bucket
     # (use e.g. arange(num_patches)) and ``target`` is the attributed class
     features: Optional[np.ndarray] = None
+    # known endpoint value f(x) donated by the decode path (the probe-reuse
+    # contract, docs/serving.md): the unified scheduler sets this to the
+    # prefill forward's target log-prob, so the engine skips the α=1 probe
+    # forward and the endpoint forward. Bit-identical to a self-computed
+    # endpoint at float32 compute; dropped automatically for path-ensemble
+    # methods (samples perturb x, so the donated value is for the wrong
+    # point). None = the engine computes f(x) itself (the classic path).
+    f_x: Optional[float] = None
 
 
 @dataclass
@@ -165,6 +173,13 @@ class EngineStats:
     # on the serving path; a nonzero count means padding was bypassed and
     # those buckets ran replicated (correct, but not scaled)
     mesh_fallbacks: int = 0
+    # unified-scheduler counters (serve.scheduler): requests served a
+    # fallback result after fault-policy exhaustion; decode work items run
+    # ahead of queued explain hops (δ-aware preemption); and the scheduler
+    # queue depth observed at the most recent dispatch
+    degraded: int = 0
+    preempted: int = 0
+    queue_depth: int = 0
 
     @property
     def hit_rate(self) -> float:
@@ -391,34 +406,51 @@ class ExplainEngine:
             **self._kernel_kwargs(cfg)
         )
 
-    def _attr_fn_at(self, cfg: HotpathConfig):
+    def _attr_fn_at(self, cfg: HotpathConfig, *, with_fx: bool = False):
         """Fixed-m bucket unit at one tuned config (also the autotuner's
-        candidate-compile hook)."""
+        candidate-compile hook). ``with_fx`` compiles the probe-reuse variant
+        whose trailing (B,) argument donates the known endpoint f(x) — a
+        DIFFERENT program (one fewer probe forward, a B-row endpoint batch),
+        so it gets its own cache-key flag."""
         exp = self._explainer_at(cfg)
+
+        if with_fx:
+
+            def attr_fx_fn(embeds, baseline, aux, mask, f_x):
+                return exp.attribute(embeds, baseline, aux, mask=mask, f_x=f_x)
+
+            return attr_fx_fn
 
         def attr_fn(embeds, baseline, aux, mask):
             return exp.attribute(embeds, baseline, aux, mask=mask)
 
         return attr_fn
 
-    def _key(self, bucket: tuple[int, int]) -> tuple:
+    def _key(self, bucket: tuple[int, int], *, with_fx: bool = False) -> tuple:
         # keyed by accumulator CLASS, not method name: methods sharing an
         # accumulator share the warmed executables (DESIGN.md §8); the mesh
         # axis sizes ride every key so sharded and single-device entries
         # coexist (DESIGN.md §9); the resolved per-bucket HotpathConfig and
         # the fused/use_kernels program choices ride it too (§10), so tuned
-        # and untuned entries never alias
+        # and untuned entries never alias; ``with_fx`` separates probe-reuse
+        # programs (docs/serving.md) from self-probing ones
         return (bucket, self._spec.accum, self.schedule, self.m, self.n_int,
                 self._cfg_for(bucket), self.fused, self.use_kernels,
-                self.attn, self._mesh_key)
+                self.attn, self._mesh_key, with_fx)
 
-    def _start_fn(self, embeds, baseline, aux, mask):
+    def _start_fn(self, embeds, baseline, aux, mask, f_x=None):
         """Adaptive rung 0: fused probe + base schedule + resumable stage 2.
 
         Returns the materialized per-example schedule too — the host needs it
         to refine on escalation (uniform's shared (m,) schedule is broadcast
-        so survivor rows can be gathered independently)."""
-        res, state, sched = self._explainer.start(embeds, baseline, aux, mask=mask)
+        so survivor rows can be gathered independently). The optional
+        trailing ``f_x`` is the probe-reuse variant (only ever compiled with
+        it present or absent — the two signatures never alias, see
+        ``_key``'s with_fx flag); the returned IGState carries the endpoints
+        either way, so hop executables are IDENTICAL for both."""
+        res, state, sched = self._explainer.start(
+            embeds, baseline, aux, mask=mask, f_x=f_x
+        )
         B = embeds.shape[0]
         sched = Schedule(
             jnp.broadcast_to(sched.alphas, (B, sched.alphas.shape[-1])),
@@ -562,14 +594,21 @@ class ExplainEngine:
                 )
             )(embeds, baseline, keys)
             embeds, baseline = e2[:, 0], b2[:, 0]
+        if bb.f_x is not None:
+            # probe-reuse bucket (docs/serving.md): the donated endpoint rides
+            # as a trailing (B,) f32 argument. plan_buckets never mixes
+            # known-fx and self-probing requests in one bucket, and explain()
+            # strips f_x for ensemble methods before planning.
+            return embeds, baseline, aux, mask, jnp.asarray(bb.f_x, jnp.float32)
         return embeds, baseline, aux, mask
 
     def _run_bucket(self, bb: BucketBatch) -> Any:
         args = self._bucket_inputs(bb)
+        with_fx = bb.f_x is not None
         bs = self.stats.bucket(bb.bucket)
         ex = self._executable(
-            self._key(bb.bucket), bs,
-            self._attr_fn_at(self._cfg_for(bb.bucket)), args,
+            self._key(bb.bucket, with_fx=with_fx), bs,
+            self._attr_fn_at(self._cfg_for(bb.bucket), with_fx=with_fx), args,
         )
         res = self._timed_call(bs, ex, args)
         bs.requests += len(bb.indices)
@@ -592,125 +631,17 @@ class ExplainEngine:
         """δ-feedback serving for one bucket: rung 0, then escalate survivors.
 
         Returns one result dict per real request in ``bb.indices`` order.
-        Escalation re-batches still-unconverged rows together (batch axis
-        padded up the batch ladder by duplicating a survivor, as at plan
-        time) and runs ONLY the refined schedule's new nodes through hop
-        executables keyed ``("hop", (B', S), n_new, chunk)`` — a closed shape
-        set, so steady-state adaptive traffic never recompiles.
+        The ladder is an ``AdaptiveBucketRun`` driven to completion inline;
+        the unified scheduler (``serve.scheduler``) drives the SAME object
+        hop-by-hop instead, interleaving decode work between hops — both
+        drivers hit identical executables and cache keys, so steady-state
+        adaptive traffic never recompiles whichever path served it.
         """
-        S = bb.bucket[1]
-        chunk = self._explainer.adaptive_chunk
-        args = self._bucket_inputs(bb)
-        key = ("start", bb.bucket, self._spec.accum, self.schedule, self.m,
-               self.n_int, chunk, self.fused, self.use_kernels, self.attn,
-               self._mesh_key)
-        bs = self.stats.bucket(bb.bucket)
-        ex = self._executable(key, bs, self._start_fn, args)
-        res, state, sched = self._timed_call(bs, ex, args)
-        bs.requests += len(bb.indices)
-
-        n_real = len(bb.indices)
-        ast = self.stats.adaptive
-        ast.requests += n_real
-        ast.total_steps += n_real * self.m
-        ast.launched_steps += bb.bucket[0] * self.m
-        # per-real-request like total_steps (pad-row forwards are launch
-        # overhead, visible via launched_steps' bucket padding instead)
-        ast.probe_forwards += n_real * probe_cost(
-            family(self.schedule).probe,
-            n_int=self.n_int,
-            rounds=self._explainer.refine_rounds,
-        )
-
-        embeds, baseline, aux, mask = (np.asarray(a) if not isinstance(a, dict)
-                                       else {k: np.asarray(v) for k, v in a.items()}
-                                       for a in args)
-        delta = np.asarray(res.delta).copy()
-        threshold = self.tol * np.abs(np.asarray(res.f_x) - np.asarray(res.f_baseline))
-        per_token = np.asarray(res.attributions.sum(-1)).copy()  # (B, S)
-        f_x = np.asarray(res.f_x)
-        f_b = np.asarray(res.f_baseline)
-        m_used = np.full((bb.bucket[0],), self.m, np.int64)
-        hops = np.zeros((bb.bucket[0],), np.int64)
-
-        # survivors: real rows whose δ still exceeds tol·|f_x − f_b|
-        act = [r for r in range(n_real) if delta[r] > threshold[r]]
-        a_act = np.asarray(sched.alphas)[act]
-        w_act = np.asarray(sched.weights)[act]
-        acc_act = np.asarray(state.acc)[act]
-
-        for rung in self.m_ladder[1:]:
-            if not act:
-                break
-            n_new = rung // 2
-            refined = family(self.schedule).refine(
-                Schedule(jnp.asarray(a_act), jnp.asarray(w_act))
-            )
-            ra, rw = np.asarray(refined.alphas), np.asarray(refined.weights)
-            rows, B2 = pad_rows(act, self.batch_buckets, multiple=self.dp)
-            # schedule/state slot per padded row: pad_rows keeps act as a
-            # prefix and repeats the last real row into the pad slots
-            pad_sel = list(range(len(act))) + [len(act) - 1] * (B2 - len(act))
-            hop_bucket = (B2, S)
-            hop_args = (
-                embeds[rows],
-                baseline[rows],
-                {k: v[rows] for k, v in aux.items()},
-                mask[rows],
-                Schedule(ra[pad_sel, n_new:], rw[pad_sel, n_new:]),
-                ig.IGState(acc_act[pad_sel], f_x[rows], f_b[rows]),
-            )
-            hop_key = ("hop", hop_bucket, self._spec.accum, n_new, chunk,
-                       self.fused, self.use_kernels, self.attn, self._mesh_key)
-            hbs = self.stats.hop_bucket(hop_bucket)
-            # the IGState (arg 5) is donated: escalation reuses the (B, *F)
-            # f32 accumulator buffer in place instead of copying each rung
-            # (DESIGN.md §10); it is rebuilt fresh per hop and never read
-            # back after the call, so donation is always safe here
-            hop = self._executable(hop_key, hbs, self._hop_fn, hop_args,
-                                   donate=(5,))
-            res2, st2 = self._timed_call(hbs, hop, hop_args)
-            ast.hop_calls += 1
-            ast.launched_steps += B2 * n_new
-            ast.total_steps += len(act) * n_new
-
-            d2 = np.asarray(res2.delta)
-            pt2 = np.asarray(res2.attributions.sum(-1))
-            acc2 = np.asarray(st2.acc)
-            keep = []
-            for slot, r in enumerate(act):  # real survivors occupy slots [0, len(act))
-                delta[r] = d2[slot]
-                per_token[r] = pt2[slot]
-                m_used[r] = rung
-                hops[r] += 1
-                if d2[slot] > threshold[r]:
-                    keep.append(slot)
-            act = [act[s] for s in keep]
-            a_act, w_act = ra[keep], rw[keep]
-            acc_act = acc2[keep]
-
-        out = []
-        for row, ri in enumerate(bb.indices):
-            converged = bool(delta[row] <= threshold[row])
-            ast.converged += converged
-            ast.early_exits += converged and int(m_used[row]) < self.m_ladder[-1]
-            ast.m_used[int(m_used[row])] = ast.m_used.get(int(m_used[row]), 0) + 1
-            out.append(
-                {
-                    "request": ri,
-                    "token_scores": per_token[row, : bb.lens[row]],
-                    "raw_token_scores": per_token[row],
-                    "delta": float(delta[row]),
-                    "threshold": float(threshold[row]),
-                    "f_x": float(f_x[row]),
-                    "f_baseline": float(f_b[row]),
-                    "bucket": bb.bucket,
-                    "m_used": int(m_used[row]),
-                    "hops": int(hops[row]),
-                    "converged": converged,
-                }
-            )
-        return out
+        run = AdaptiveBucketRun(self, bb)
+        run.start()
+        while run.hop():
+            pass
+        return run.results()
 
     @staticmethod
     def _reduce_samples(group: list[dict]) -> dict:
@@ -755,9 +686,17 @@ class ExplainEngine:
         contract above is method-independent.
         """
         n = self.n_samples
-        expanded = (
-            list(requests) if n == 1 else [r for r in requests for _ in range(n)]
-        )
+        if n == 1:
+            expanded = list(requests)
+        else:
+            # ensemble rows perturb the input in embedding space, so a
+            # decode-donated endpoint value is for the WRONG point — strip it
+            # before planning (requests fall back to self-probing buckets)
+            expanded = [
+                replace(r, f_x=None) if r.f_x is not None else r
+                for r in requests
+                for _ in range(n)
+            ]
         plan = plan_buckets(
             expanded,
             seq_buckets=self.seq_buckets,
@@ -794,3 +733,199 @@ class ExplainEngine:
             self._reduce_samples(out[i * n : (i + 1) * n])
             for i in range(len(requests))
         ]
+
+
+class AdaptiveBucketRun:
+    """One bucket's δ-adaptive ladder as explicit, preemptible work items.
+
+    The classic engine path (``ExplainEngine._run_bucket_adaptive``) drives
+    this to completion inline; the unified scheduler (``serve.scheduler``)
+    interleaves ``hop()`` calls with decode work instead — each hop is one
+    compiled executable call over the still-unconverged survivors, so decode
+    traffic preempts BETWEEN hops, never inside a compiled program. Hop
+    executables and their cache keys are byte-identical on both drivers, so
+    mixed and standalone traffic warm ONE shared executable set (the
+    zero-steady-state-recompile invariant extends across the scheduler).
+
+    Protocol:
+      * ``start()`` — rung 0: probe + base schedule + resumable stage 2
+        (honors a donated ``bb.f_x`` endpoint, see docs/serving.md);
+      * while ``active``: ``hop()`` escalates the survivors one rung and
+        returns whether work remains;
+      * ``degrade()`` — abandon the remaining ladder: the current rung's
+        results stand as the fallback (they are complete attributions, just
+        less converged than tol demands); affected rows are marked
+        ``degraded`` and counted on ``EngineStats.degraded``;
+      * ``results()`` — finalize the adaptive stats (once) and return one
+        dict per real request in ``bb.indices`` order.
+    """
+
+    def __init__(self, engine: ExplainEngine, bb: BucketBatch):
+        self.eng = engine
+        self.bb = bb
+        self._started = False
+        self._results: Optional[list[dict]] = None
+        self._degraded: set[int] = set()
+        self._rung_i = 1  # next ladder index to run (0 is start())
+        self.act: list[int] = []
+
+    @property
+    def active(self) -> bool:
+        """More ladder hops pending (unconverged survivors + rungs left)."""
+        return bool(self.act) and self._rung_i < len(self.eng.m_ladder)
+
+    def start(self) -> None:
+        eng, bb = self.eng, self.bb
+        assert not self._started
+        self._started = True
+        self.chunk = eng._explainer.adaptive_chunk
+        with_fx = bb.f_x is not None
+        args = eng._bucket_inputs(bb)
+        key = ("start", bb.bucket, eng._spec.accum, eng.schedule, eng.m,
+               eng.n_int, self.chunk, eng.fused, eng.use_kernels, eng.attn,
+               eng._mesh_key, with_fx)
+        bs = eng.stats.bucket(bb.bucket)
+        ex = eng._executable(key, bs, eng._start_fn, args)
+        res, state, sched = eng._timed_call(bs, ex, args)
+        bs.requests += len(bb.indices)
+
+        n_real = len(bb.indices)
+        ast = eng.stats.adaptive
+        ast.requests += n_real
+        ast.total_steps += n_real * eng.m
+        ast.launched_steps += bb.bucket[0] * eng.m
+        # per-real-request like total_steps (pad-row forwards are launch
+        # overhead, visible via launched_steps' bucket padding instead); a
+        # donated endpoint saves the α=1 probe forward per row
+        ast.probe_forwards += n_real * probe_cost(
+            family(eng.schedule).probe,
+            n_int=eng.n_int,
+            rounds=eng._explainer.refine_rounds,
+            known_fx=with_fx,
+        )
+
+        embeds, baseline, aux, mask = args[:4]
+        self.embeds = np.asarray(embeds)
+        self.baseline = np.asarray(baseline)
+        self.aux = {k: np.asarray(v) for k, v in aux.items()}
+        self.mask = np.asarray(mask)
+        self.delta = np.asarray(res.delta).copy()
+        self.f_x = np.asarray(res.f_x)
+        self.f_b = np.asarray(res.f_baseline)
+        self.threshold = eng.tol * np.abs(self.f_x - self.f_b)
+        self.per_token = np.asarray(res.attributions.sum(-1)).copy()  # (B, S)
+        self.m_used = np.full((bb.bucket[0],), eng.m, np.int64)
+        self.hops = np.zeros((bb.bucket[0],), np.int64)
+
+        # survivors: real rows whose δ still exceeds tol·|f_x − f_b|
+        self.act = [r for r in range(n_real) if self.delta[r] > self.threshold[r]]
+        self.a_act = np.asarray(sched.alphas)[self.act]
+        self.w_act = np.asarray(sched.weights)[self.act]
+        self.acc_act = np.asarray(state.acc)[self.act]
+
+    def hop(self) -> bool:
+        """Run ONE escalation rung over the survivors; returns ``active``.
+
+        Escalation re-batches still-unconverged rows together (batch axis
+        padded up the batch ladder by duplicating a survivor, as at plan
+        time) and runs ONLY the refined schedule's new nodes through hop
+        executables keyed ``("hop", (B', S), n_new, chunk)`` — a closed shape
+        set, so steady-state adaptive traffic never recompiles.
+        """
+        if not self.active:
+            return False
+        eng, act = self.eng, self.act
+        S = self.bb.bucket[1]
+        rung = eng.m_ladder[self._rung_i]
+        self._rung_i += 1
+        n_new = rung // 2
+        refined = family(eng.schedule).refine(
+            Schedule(jnp.asarray(self.a_act), jnp.asarray(self.w_act))
+        )
+        ra, rw = np.asarray(refined.alphas), np.asarray(refined.weights)
+        rows, B2 = pad_rows(act, eng.batch_buckets, multiple=eng.dp)
+        # schedule/state slot per padded row: pad_rows keeps act as a
+        # prefix and repeats the last real row into the pad slots
+        pad_sel = list(range(len(act))) + [len(act) - 1] * (B2 - len(act))
+        hop_bucket = (B2, S)
+        hop_args = (
+            self.embeds[rows],
+            self.baseline[rows],
+            {k: v[rows] for k, v in self.aux.items()},
+            self.mask[rows],
+            Schedule(ra[pad_sel, n_new:], rw[pad_sel, n_new:]),
+            ig.IGState(self.acc_act[pad_sel], self.f_x[rows], self.f_b[rows]),
+        )
+        hop_key = ("hop", hop_bucket, eng._spec.accum, n_new, self.chunk,
+                   eng.fused, eng.use_kernels, eng.attn, eng._mesh_key)
+        hbs = eng.stats.hop_bucket(hop_bucket)
+        # the IGState (arg 5) is donated: escalation reuses the (B, *F)
+        # f32 accumulator buffer in place instead of copying each rung
+        # (DESIGN.md §10); it is rebuilt fresh per hop and never read
+        # back after the call, so donation is always safe here
+        hop = eng._executable(hop_key, hbs, eng._hop_fn, hop_args, donate=(5,))
+        res2, st2 = eng._timed_call(hbs, hop, hop_args)
+        ast = eng.stats.adaptive
+        ast.hop_calls += 1
+        ast.launched_steps += B2 * n_new
+        ast.total_steps += len(act) * n_new
+
+        d2 = np.asarray(res2.delta)
+        pt2 = np.asarray(res2.attributions.sum(-1))
+        acc2 = np.asarray(st2.acc)
+        keep = []
+        for slot, r in enumerate(act):  # real survivors occupy slots [0, len(act))
+            self.delta[r] = d2[slot]
+            self.per_token[r] = pt2[slot]
+            self.m_used[r] = rung
+            self.hops[r] += 1
+            if d2[slot] > self.threshold[r]:
+                keep.append(slot)
+        self.act = [act[s] for s in keep]
+        self.a_act, self.w_act = ra[keep], rw[keep]
+        self.acc_act = acc2[keep]
+        return self.active
+
+    def degrade(self) -> int:
+        """Abandon the remaining ladder; current-rung results become the
+        fallback. Returns how many real rows were degraded (each counted on
+        ``EngineStats.degraded``). Idempotent once drained."""
+        n = len(self.act)
+        if n:
+            self._degraded.update(self.act)
+            self.eng.stats.degraded += n
+            self.act = []
+        return n
+
+    def results(self) -> list[dict]:
+        """One result dict per real request (``bb.indices`` order); finalizes
+        the aggregate adaptive counters exactly once."""
+        if self._results is not None:
+            return self._results
+        eng, bb = self.eng, self.bb
+        ast = eng.stats.adaptive
+        out = []
+        for row, ri in enumerate(bb.indices):
+            converged = bool(self.delta[row] <= self.threshold[row])
+            ast.converged += converged
+            ast.early_exits += converged and int(self.m_used[row]) < eng.m_ladder[-1]
+            mu = int(self.m_used[row])
+            ast.m_used[mu] = ast.m_used.get(mu, 0) + 1
+            out.append(
+                {
+                    "request": ri,
+                    "token_scores": self.per_token[row, : bb.lens[row]],
+                    "raw_token_scores": self.per_token[row],
+                    "delta": float(self.delta[row]),
+                    "threshold": float(self.threshold[row]),
+                    "f_x": float(self.f_x[row]),
+                    "f_baseline": float(self.f_b[row]),
+                    "bucket": bb.bucket,
+                    "m_used": mu,
+                    "hops": int(self.hops[row]),
+                    "converged": converged,
+                    "degraded": row in self._degraded,
+                }
+            )
+        self._results = out
+        return out

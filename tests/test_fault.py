@@ -95,6 +95,48 @@ def test_straggler_monitor_flags_slow_steps():
     assert len(mon.flagged) == 1
 
 
+def test_straggler_warmup_seeds_from_median():
+    """Regression: seeding the EWMA from the FIRST observation let a cold
+    -compile step (10-100x steady state) poison the mean permanently —
+    stragglers never update the mean, so the monitor stayed blind for the
+    whole run. The mean must seed from the warmup median instead."""
+    mon = StragglerMonitor(FaultConfig(straggler_threshold=2.0, straggler_warmup=3))
+    assert not mon.observe(10.0)  # cold compile; warmup never flags
+    assert not mon.observe(0.1)
+    assert not mon.observe(0.1)
+    assert mon.mean == pytest.approx(0.1)  # median, not the 10.0 outlier
+    assert not mon.observe(0.1)
+    assert mon.observe(0.5)  # a real straggler is visible immediately
+    assert len(mon.flagged) == 1
+
+
+def test_recovery_rollback_clamps_history(tmp_path):
+    """Regression: restoring from a checkpoint that PREDATES start_step
+    (a manager shared across drivers) computed a negative history cut,
+    silently keeping a wrong suffix. The cut must clamp to zero and the
+    replayed trajectory must be exactly the post-restore steps."""
+    cm = CheckpointManager(str(tmp_path), keep_n=3)
+    ck_state = {"step": jnp.asarray(2), "w": jnp.asarray(float(sum(range(2))))}
+    cm.save(2, ck_state)
+    cm.wait()
+    state = {"step": jnp.asarray(5), "w": jnp.asarray(float(sum(range(5))))}
+    step_fn = FlakyStep(fail_at=(9,))
+    final, hist = run_with_recovery(
+        step_fn,
+        state,
+        IndexableBatches(10),
+        num_steps=10,
+        ckpt_manager=cm,
+        fault_cfg=FaultConfig(max_retries=2, backoff_base_s=0.0),
+        start_step=5,
+    )
+    assert int(final["step"]) == 10
+    # history holds ONLY the replayed-from-checkpoint trajectory 2..9; with
+    # the negative-slice bug the pre-restore step-5 entry survived the cut
+    assert [h["loss"] for h in hist] == [float(s) for s in range(2, 10)]
+    assert float(final["w"]) == sum(range(10))
+
+
 def test_elastic_mesh_shrinks_data_axis():
     em = ElasticMesh(model_size=16, data_size=16, pod_size=2)
     assert em.device_count == 512

@@ -40,6 +40,35 @@ def test_generate_matches_stepwise_forward():
         cur = jnp.concatenate([cur, jnp.asarray(nxt)[:, None]], axis=1)
 
 
+def test_generate_num_tokens_zero_is_empty():
+    """Regression: num_tokens=0 must return (B, 0), not smuggle out the
+    free prefill token."""
+    cfg, params, eng = _engine()
+    batch = {"tokens": jax.random.randint(KEY, (2, 8), 0, cfg.vocab_size)}
+    out = eng.generate(batch, 0)
+    assert out.shape == (2, 0)
+    assert out.dtype == jnp.int32
+
+
+def test_generate_sampling_honors_key_and_temperature():
+    """Regression: the serve step ignored its greedy flag, so sampled
+    serving silently decoded greedily. Sampling must differ from greedy at
+    high temperature yet stay reproducible under the same key."""
+    cfg, params, eng = _engine(max_len=24)
+    batch = {"tokens": jax.random.randint(KEY, (2, 8), 0, cfg.vocab_size)}
+    greedy = np.asarray(eng.generate(batch, 8))
+    k = jax.random.PRNGKey(7)
+    s1 = np.asarray(eng.generate(batch, 8, key=k, temperature=8.0))
+    s2 = np.asarray(eng.generate(batch, 8, key=k, temperature=8.0))
+    np.testing.assert_array_equal(s1, s2)  # same key -> same draw
+    assert not np.array_equal(s1, greedy)  # hot sampling is not argmax
+    s3 = np.asarray(eng.generate(batch, 8, key=jax.random.PRNGKey(8),
+                                 temperature=8.0))
+    assert not np.array_equal(s1, s3)  # different key -> different draw
+    assert bool(jnp.all((jnp.asarray(s1) >= 0)))
+    assert s1.shape == (2, 8)
+
+
 def test_explain_service_paper_vs_uniform():
     cfg = reduced(ARCHS["llama3-8b"])
     model = Model(cfg)
