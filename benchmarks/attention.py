@@ -188,7 +188,9 @@ def run(
         wrow["latency_ratio"] = walls["flash"] / walls["materializing"]
 
         # -- adaptive trace parity per method -------------------------------
-        for method in sorted(METHODS):
+        for method in sorted(
+            n for n in METHODS if not METHODS[n].forward_only
+        ):
             traces: dict = {}
             for label, attn in (("materializing", "auto"), ("flash", "flash")):
                 eng = ExplainEngine(

@@ -94,7 +94,7 @@ def run(
     failures: list[str] = []
 
     # -- per-method fused-vs-unfused sweep (fixed-m bytes/latency + traces) --
-    for method in sorted(METHODS):
+    for method in sorted(n for n in METHODS if not METHODS[n].forward_only):
         spec = METHODS[method]
         row: dict = {"accum": spec.accum}
         for label, fused in (("unfused", False), ("fused", True)):

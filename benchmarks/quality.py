@@ -1,5 +1,6 @@
 """Method-zoo quality bench: insertion/deletion AUC + latency per
-method × schedule on the trained paper CNN -> results/BENCH_quality.json.
+method × schedule on the trained paper CNN, PLUS the gradient-vs-
+perturbation bake-off -> results/BENCH_quality.json.
 
 The MethodSpec registry (DESIGN.md §8) promises that every attribution
 method rides every schedule family through one compiled pipeline; this bench
@@ -8,6 +9,16 @@ records heatmap quality (insertion AUC up / deletion AUC down = better
 feature ordering — ``repro.core.metrics``), the completeness gap δ, and the
 warmed end-to-end wall latency of the jitted explainer (compile time paid
 outside the timed call, as in serving).
+
+The bake-off extends the table across the CLASS boundary: the forward-only
+perturbation methods (occlusion / RISE / LIME, ``repro.core.perturb``) score
+the same trained CNN (via a cell grid — pixels share their cell's score) and
+the trained reduced ViT (patch features) at a FORWARD-MATCHED budget
+P = 2·m — each of the gradient class's m interpolation steps costs one
+forward + one backward pass, so 2m forwards is the same model-evaluation
+budget. Gates folded into ``pass``: insertion AUC > deletion AUC for every
+perturbation method × workload cell, and the forward-only serving path
+replays with ZERO steady-state recompiles.
 """
 from __future__ import annotations
 
@@ -17,12 +28,127 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import cnn_prob_fn, eval_batch, load_or_train_cnn
-from repro.core import metrics
+from benchmarks.common import (
+    cnn_prob_fn,
+    eval_batch,
+    load_or_train_cnn,
+    load_or_train_vit,
+)
+from repro.core import metrics, perturb
 from repro.core.api import Explainer
 from repro.core.methods import METHODS
 
 DEFAULT_SCHEDULES = ("uniform", "paper", "warp")
+CNN_CELL = 4  # 32x32x3 -> 8x8 grid of 4x4x3 cells (S=64 positions)
+
+
+def _timed_auc(f, x, bl, t, attribute_fn, score_to_attr, *, auc_steps):
+    """Compile+warm, one timed call, then the insertion/deletion curves.
+
+    ``attribute_fn(x, bl, t)`` is the jitted unit under test;
+    ``score_to_attr`` maps its output to pixel/feature attributions in the
+    space ``metrics.insertion_deletion_auc`` ranks (the AUC comparability
+    contract across the class boundary)."""
+    res = jax.block_until_ready(attribute_fn(x, bl, t))
+    t0 = time.perf_counter()
+    res = jax.block_until_ready(attribute_fn(x, bl, t))
+    wall = time.perf_counter() - t0
+    attr = score_to_attr(res)
+    ins, dele = metrics.insertion_deletion_auc(f, x, bl, attr, t, steps=auc_steps)
+    return {
+        "insertion_auc": float(jnp.mean(ins)),
+        "deletion_auc": float(jnp.mean(dele)),
+        "latency_ms": 1e3 * wall,
+    }, res
+
+
+def _bakeoff_workloads(batch_size: int):
+    """The two bake-off substrates, each exposing the SAME cell contract:
+    (name, pixel/feature f, x, baseline, targets, position lift/unlift).
+
+    The bake-off scores the target-class LOGIT, not the probability: the
+    trained bench models are saturated (f32 prob exactly 1.0), so a small
+    occlusion's probability drop is EXACTLY zero and every perturbation
+    heatmap degenerates to argsort-of-zeros — the logit still moves, and
+    the insertion>deletion ordering only needs a monotone response."""
+    from repro.configs.paper_cnn import CONFIG as CNN_CONFIG
+    from repro.models import cnn, vit
+
+    cnn_params = load_or_train_cnn()
+
+    def f_cnn(imgs, target):
+        logits = cnn.forward(CNN_CONFIG, cnn_params, imgs)
+        return jnp.take_along_axis(logits, target[:, None], axis=-1)[:, 0]
+
+    x, t = eval_batch(batch_size)
+    img_shape = tuple(x.shape[1:])
+
+    vit_cfg, vit_params = load_or_train_vit()
+    feats = vit.patchify(vit_cfg, x)
+
+    def f_vit(fe, target):
+        e = vit.embed_features(vit_cfg, vit_params, fe)
+        logits = vit.pool_logits(vit_cfg, vit_params, vit.encode(vit_cfg, vit_params, e))
+        return jnp.take_along_axis(logits, target[:, None], axis=-1)[:, 0]
+
+    return {
+        "cnn": {
+            # perturbation positions are image CELLS: occlude a 4x4x3 patch,
+            # every pixel inherits its cell's score for the AUC ranking
+            "f": f_cnn,
+            "x": x,
+            "baseline": jnp.zeros_like(x),
+            "t": t,
+            "pos_f": perturb.cell_fn(f_cnn, img_shape, CNN_CELL),
+            "pos_x": perturb.image_to_cells(x, CNN_CELL),
+            "scores_to_attr": lambda s: perturb.cell_scores_to_pixels(
+                s, img_shape, CNN_CELL
+            ),
+        },
+        "vit": {
+            # positions are the model's own patches; feature-space AUC
+            "f": f_vit,
+            "x": feats,
+            "baseline": jnp.zeros_like(feats),
+            "t": t,
+            "pos_f": f_vit,
+            "pos_x": feats,
+            "scores_to_attr": lambda s: jnp.broadcast_to(
+                s[..., None], s.shape + (feats.shape[-1],)
+            ),
+        },
+    }
+
+
+def _forward_replay_recompiles(n_masks: int) -> dict:
+    """Serve the forward-only class through ExplainEngine on the reduced-ViT
+    feature workload and replay: steady state must be PURE cache hits (the
+    same zero-recompile wall the gradient class is held to)."""
+    from repro.models import vit
+    from repro.serve import ExplainEngine, ExplainRequest
+
+    vit_cfg, vit_params = load_or_train_vit()
+    x, t = eval_batch(2)
+    feats = np.asarray(vit.patchify(vit_cfg, x), np.float32)
+    reqs = [
+        ExplainRequest(
+            tokens=np.arange(feats.shape[1], dtype=np.int32),
+            target=int(t[i]),
+            features=feats[i],
+        )
+        for i in range(feats.shape[0])
+    ]
+    out = {}
+    for method in ("occlusion", "rise", "lime"):
+        eng = ExplainEngine(
+            vit_cfg, vit_params, method=method, n_masks=n_masks,
+            seq_buckets=(feats.shape[1],),
+        )
+        eng.explain(reqs)  # warm: compiles counted here
+        warmed = eng.stats.misses
+        eng.explain(reqs)  # replay: must be hits only
+        out[method] = eng.stats.misses - warmed
+    return out
 
 
 def run(
@@ -34,7 +160,13 @@ def run(
     sigma: float = 0.05,
     schedules=DEFAULT_SCHEDULES,
     auc_steps: int = 8,
+    smoke: bool = False,
 ) -> dict:
+    if smoke:
+        batch_size = min(batch_size, 2)
+        m = 16
+        schedules = ("paper",)
+    n_masks = 2 * m  # forward-matched budget: m grad steps ≈ 2m forwards
     params = load_or_train_cnn()
     f = cnn_prob_fn(params)
     x, t = eval_batch(batch_size)
@@ -45,13 +177,19 @@ def run(
         "n_int": n_int,
         "n_samples": n_samples,
         "sigma": sigma,
+        "n_masks": n_masks,
         "batch": int(x.shape[0]),
         "auc_steps": auc_steps,
+        "smoke": smoke,
         "cells": {},
+        "bakeoff": {},
     }
     print(f"\n== method-zoo quality (m={m}, n_int={n_int}, B={x.shape[0]}) ==")
     print("method,schedule,insertion_auc,deletion_auc,delta,latency_ms")
-    for method in sorted(METHODS):
+    gradient_methods = [
+        name for name in sorted(METHODS) if not METHODS[name].forward_only
+    ]
+    for method in gradient_methods:
         for sched_name in schedules:
             ex = Explainer(
                 f,
@@ -62,35 +200,81 @@ def run(
                 n_samples=n_samples,
                 sigma=sigma,
             )
-            attribute = ex.jitted()
-            res = jax.block_until_ready(attribute(x, bl, t))  # compile + warm
-            t0 = time.perf_counter()
-            res = jax.block_until_ready(attribute(x, bl, t))
-            wall = time.perf_counter() - t0
-            ins, dele = metrics.insertion_deletion_auc(
-                f, x, bl, res.attributions, t, steps=auc_steps
+            cell, res = _timed_auc(
+                f, x, bl, t, ex.jitted(), lambda r: r.attributions,
+                auc_steps=auc_steps,
             )
-            cell = {
-                "insertion_auc": float(jnp.mean(ins)),
-                "deletion_auc": float(jnp.mean(dele)),
-                "delta": float(jnp.mean(res.delta)),
-                "latency_ms": 1e3 * wall,
-            }
+            cell["delta"] = float(jnp.mean(res.delta))
             out["cells"][f"{method}/{sched_name}"] = cell
             print(
                 f"{method},{sched_name},{cell['insertion_auc']:.4f},"
                 f"{cell['deletion_auc']:.4f},{cell['delta']:.5f},"
                 f"{cell['latency_ms']:.1f}"
             )
-    # sanity aggregated into the JSON: every method must order features
-    # better than chance (insertion above deletion) on the confident CNN
-    out["pass"] = bool(
-        all(
-            c["insertion_auc"] > c["deletion_auc"] for c in out["cells"].values()
+
+    # -- gradient-vs-perturbation bake-off (forward-matched budgets) --------
+    print(f"\n== bake-off (gradient m={m} vs perturbation P={n_masks}) ==")
+    print("workload,method,class,insertion_auc,deletion_auc,latency_ms")
+    perturbation_methods = [
+        name for name in sorted(METHODS) if METHODS[name].forward_only
+    ]
+    for wname, w in _bakeoff_workloads(batch_size).items():
+        rows: dict = {}
+        # gradient anchor at the same model-evaluation budget
+        ex = Explainer(w["f"], method="ig", schedule="paper", m=m, n_int=n_int)
+        cell, _ = _timed_auc(
+            w["f"], w["x"], w["baseline"], w["t"], ex.jitted(),
+            lambda r: r.attributions, auc_steps=auc_steps,
         )
+        cell["class"] = "gradient"
+        cell["budget"] = f"m={m}"
+        rows["ig"] = cell
+        pos_bl = jnp.zeros_like(w["pos_x"])
+        for method in perturbation_methods:
+            pe = perturb.PerturbExplainer(w["pos_f"], method=method, n_masks=n_masks)
+            attribute = jax.jit(lambda xi, bli, ti, pe=pe: pe.attribute(xi, bli, ti))
+            cell, _ = _timed_auc(
+                w["f"], w["x"], w["baseline"], w["t"],
+                # positions are cells/patches: attribute in the position
+                # view, rank in the pixel/feature view
+                lambda _x, _b, ti: attribute(w["pos_x"], pos_bl, ti),
+                lambda r: w["scores_to_attr"](r.attributions),
+                auc_steps=auc_steps,
+            )
+            cell["class"] = "forward_only"
+            cell["budget"] = f"P={n_masks}"
+            rows[method] = cell
+        out["bakeoff"][wname] = rows
+        for method, cell in rows.items():
+            print(
+                f"{wname},{method},{cell['class']},{cell['insertion_auc']:.4f},"
+                f"{cell['deletion_auc']:.4f},{cell['latency_ms']:.1f}"
+            )
+
+    # -- forward-only serving wall: zero steady-state recompiles on replay --
+    replays = _forward_replay_recompiles(16 if smoke else n_masks)
+    out["forward_replay_recompiles"] = replays
+    print(f"forward-only replay recompiles: {replays}")
+
+    # gates aggregated into the JSON: every gradient cell AND every
+    # perturbation × workload cell must order features better than chance,
+    # and forward-only replay must be pure cache hits
+    cells_ok = all(
+        c["insertion_auc"] > c["deletion_auc"] for c in out["cells"].values()
     )
-    print(f"quality gate (insertion > deletion for every cell): "
-          f"{'PASS' if out['pass'] else 'FAIL'}")
+    bakeoff_ok = all(
+        cell["insertion_auc"] > cell["deletion_auc"]
+        for rows in out["bakeoff"].values()
+        for name, cell in rows.items()
+        if cell["class"] == "forward_only"
+    )
+    replay_ok = all(v == 0 for v in replays.values())
+    out["pass"] = bool(cells_ok and bakeoff_ok and replay_ok)
+    print(
+        f"quality gates: cells={'PASS' if cells_ok else 'FAIL'} "
+        f"bakeoff={'PASS' if bakeoff_ok else 'FAIL'} "
+        f"replay={'PASS' if replay_ok else 'FAIL'}"
+    )
     return out
 
 

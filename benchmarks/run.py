@@ -181,6 +181,21 @@ def main() -> int:
         print(f"# attention bench -> {path}")
         return 0 if out["pass"] else 1
 
+    # --quality must be checked BEFORE the bare-smoke adaptive gate: with
+    # both flags set the caller wants the CI-sized bake-off, not adaptive
+    if args.quality:
+        out = quality.run(smoke=args.smoke)
+        path = _write("BENCH_quality.json", out)
+        _trajectory("quality", {
+            "smoke": args.smoke,
+            "cells": len(out.get("cells", {})),
+            "bakeoff_workloads": len(out.get("bakeoff", {})),
+            "forward_replay_recompiles": out.get("forward_replay_recompiles"),
+            "pass": out["pass"],
+        })
+        print(f"# quality bench -> {path}")
+        return 0 if out["pass"] else 1
+
     if args.adaptive or args.smoke:
         out = convergence.adaptive_run(
             batch_size=4 if args.smoke else 8, smoke=args.smoke
@@ -195,15 +210,6 @@ def main() -> int:
             "pass": out["pass"],
         })
         print(f"# adaptive bench -> {path}")
-        return 0 if out["pass"] else 1
-
-    if args.quality:
-        out = quality.run()
-        path = _write("BENCH_quality.json", out)
-        _trajectory("quality", {
-            "cells": len(out.get("cells", {})), "pass": out["pass"],
-        })
-        print(f"# quality bench -> {path}")
         return 0 if out["pass"] else 1
 
     t0 = time.time()

@@ -131,6 +131,12 @@ def attribute(
     ``return_state`` the call returns ``(IGResult, IGState)``.
     """
     spec = methods_mod.get(method)
+    if spec.forward_only:
+        raise ValueError(
+            f"method {spec.name!r} is forward-only (perturbation class); "
+            "it never differentiates the model — use "
+            "repro.core.perturb.attribute_from_masks / PerturbExplainer"
+        )
     if accum_fn is None:
         accum_fn = spec.accum_fn
     B = x.shape[0]

@@ -29,6 +29,27 @@ path-ensemble expansion. The registered methods:
                   (``core/baselines``): expand each example with baselines
                   jittered by ``baselines.gaussian``, average.
 
+Forward-only class (``forward_only=True`` — ``repro.core.perturb``): a
+SECOND executable class that never differentiates the model. The
+accumulator consumes ``f(perturbed)`` VALUES over a batch of binary
+position masks instead of gradients, so these methods explain models with
+no usable VJP (quantized / remote / black-box):
+
+  occlusion     — deterministic sliding-window masks; score = mean f-drop
+                  over the windows occluding a position.
+  rise          — random Bernoulli keep-masks (Petsiuk et al., 2018);
+                  score = E[f | kept] − E[f].
+  lime          — binary masks over contiguous position groups, weighted
+                  ridge regression of f on the group indicators (the WLS
+                  solve is the ``kernels/lstsq`` Pallas kernel on the
+                  serving path).
+
+For forward-only specs ``accum_fn``/``finalize`` follow the perturbation
+contract (``update(stats, vals, z, *, ctx)`` / ``finalize(stats, *, ctx)``
+— see ``perturb._FWD``), ``accum`` still names the executable class the
+engine keys by (each method compiles its own), and ``n_masks`` is the
+default mask budget P (the forward analogue of m).
+
 Hop-executable compatibility (DESIGN.md §7/§8): the serving engine keys its
 stage-2 executables by ``MethodSpec.accum`` — the accumulator CLASS — not by
 method name. ``ig``/``noise_tunnel``/``expected_grad`` all accumulate with
@@ -193,6 +214,12 @@ class MethodSpec:
     n_samples: int = 1
     sigma_default: float = 0.1
     grad_linear: bool = True  # accumulator linear in per-step grads (§10)
+    # forward-only perturbation class (repro.core.perturb): the accumulator
+    # consumes f(perturbed) VALUES over n_masks binary masks, never a VJP —
+    # ig.attribute refuses these specs; they serve through the engine's
+    # forward-evaluator executables (or perturb.attribute_from_masks)
+    forward_only: bool = False
+    n_masks: int = 0  # default mask budget P (forward-only methods)
     description: str = ""
 
     def row_spec(self) -> "MethodSpec":
@@ -225,17 +252,39 @@ METHODS: dict[str, MethodSpec] = {
 }
 
 
+def _register_forward_only() -> None:
+    # deferred import: perturb needs nothing from this module at import time,
+    # but keeping the registration lazy-shaped documents the one-way edge
+    from repro.core import perturb
+
+    for name, n_masks, desc in (
+        ("occlusion", 64, "sliding-window occlusion (mean f-drop per position)"),
+        ("rise", 64, "RISE: random binary keep-masks, E[f | kept] − E[f]"),
+        ("lime", 64, "LIME: weighted ridge regression on position-group masks"),
+    ):
+        update, finalize = perturb._FWD[name][1:]
+        METHODS[name] = MethodSpec(
+            name, name, update, finalize, forward_only=True,
+            grad_linear=False, n_masks=n_masks, description=desc,
+        )
+
+
+_register_forward_only()
+
+
 def get(name: str) -> MethodSpec:
     """Look up a registered ``MethodSpec`` by name (specs pass through).
 
         >>> sorted(METHODS)
-        ['expected_grad', 'idgi', 'ig', 'noise_tunnel']
+        ['expected_grad', 'idgi', 'ig', 'lime', 'noise_tunnel', 'occlusion', 'rise']
         >>> get("noise_tunnel").accum  # shares ig's executables (§8)
         'riemann'
+        >>> get("rise").forward_only  # perturbation class: no VJP needed
+        True
         >>> get("nope")
         Traceback (most recent call last):
             ...
-        ValueError: unknown attribution method 'nope'; known: ['expected_grad', 'idgi', 'ig', 'noise_tunnel']
+        ValueError: unknown attribution method 'nope'; known: ['expected_grad', 'idgi', 'ig', 'lime', 'noise_tunnel', 'occlusion', 'rise']
     """
     if isinstance(name, MethodSpec):
         return name

@@ -1,0 +1,74 @@
+"""Batched in-VMEM Gauss–Jordan solve — the LIME weighted-least-squares
+kernel (forward-only perturbation class).
+
+One grid step per batch row: the whole (N, N) system lives in VMEM for the
+full elimination sweep — N is the LIME group count + intercept (tens), so
+a row's system is a few KB and the alternative (XLA's batched LU via
+``linalg.solve``) round-trips HBM per factorization step for matrices that
+fit in registers. No pivoting: the serving path only ever solves ridge-
+regularized normal equations (SPD + λI, diagonally solid) and the masked
+rows are pinned to identity before the call (``ref.prepare_normal_eqs``),
+so the pivot is always the strictly-positive diagonal.
+
+The sweep is ``fori_loop`` over pivots with 2D ``broadcasted_iota`` row/
+column masks (TPU needs ≥2D iota; masked reductions replace dynamic row
+extraction): eliminate ``A ← A − col_k ⊗ row_k/piv`` everywhere except the
+pivot row, which is overwritten with the normalized row — after N sweeps
+``A = I`` and the right-hand side IS the solution.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gauss_jordan_kernel(a_ref, b_ref, o_ref):
+    A = a_ref[0]  # (N, N) — ops upcasts to the compute dtype (≥ f32)
+    b = b_ref[0]  # (N, 1)
+    N = A.shape[0]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (N, N), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (N, N), 1)
+    rid = jax.lax.broadcasted_iota(jnp.int32, (N, 1), 0)
+    zero = jnp.zeros((), A.dtype)
+
+    def body(k, carry):
+        A, b = carry
+        on_row = rows == k
+        on_col = cols == k
+        piv = jnp.sum(jnp.where(on_row & on_col, A, zero), axis=(0, 1), keepdims=True)
+        inv = 1.0 / piv  # (1, 1)
+        row_k = jnp.sum(jnp.where(on_row, A, zero), axis=0, keepdims=True) * inv
+        col_k = jnp.sum(jnp.where(on_col, A, zero), axis=1, keepdims=True)  # (N, 1)
+        bk = jnp.sum(jnp.where(rid == k, b, zero), axis=(0, 1), keepdims=True) * inv
+        colz = jnp.where(rid == k, zero, col_k)  # pivot row eliminates last
+        A = jnp.where(on_row, jnp.broadcast_to(row_k, A.shape), A - colz * row_k)
+        b = jnp.where(rid == k, jnp.broadcast_to(bk, b.shape), b - colz * bk)
+        return A, b
+
+    _, b = jax.lax.fori_loop(0, N, body, (A, b))
+    o_ref[0] = b
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def wls_solve_pallas(A: jax.Array, rhs: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """A (B, N, N); rhs (B, N) -> (B, N), solved per batch row in VMEM.
+
+    Callers pre-condition the system (ridge + mask pinning + padding to the
+    sublane multiple) — see ``kernels.lstsq.ops.wls_solve``.
+    """
+    B, N, _ = A.shape
+    out = pl.pallas_call(
+        _gauss_jordan_kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, N, N), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, N, 1), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, N, 1), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, N, 1), A.dtype),
+        interpret=interpret,
+    )(A, rhs[..., None])
+    return out[..., 0]

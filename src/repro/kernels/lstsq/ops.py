@@ -1,0 +1,54 @@
+"""jit'd public wrapper for the batched WLS solve (LIME, DESIGN.md §8).
+
+``wls_solve`` honors the LIME solve-hook signature
+``(A, rhs, *, mask, ridge) -> beta`` so it drops into
+``core.perturb.attribute_from_masks(solve_fn=...)`` — the serving engine
+injects it under ``use_kernels=True``; the default hook is the pure-jnp
+oracle ``kernels.lstsq.ref.wls_solve_ref``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import default_interpret
+from repro.kernels.lstsq.kernel import wls_solve_pallas
+from repro.kernels.lstsq.ref import prepare_normal_eqs
+
+
+def wls_solve(
+    A: jax.Array,
+    rhs: jax.Array,
+    *,
+    mask: Optional[jax.Array] = None,
+    ridge: float = 0.0,
+    block_n: int = 8,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Solve ``(A + λI) β = rhs`` per batch row with the Pallas kernel.
+
+    A: (B, N, N) accumulated normal equations (any float dtype — upcast to
+    f32 minimum, the class accumulation dtype; f64 under ``enable_x64``);
+    rhs: (B, N); mask: optional (B, N) valid-entry mask — invalid rows are
+    pinned to identity/zero-rhs (ragged batches: β is EXACTLY zero there).
+    N is padded up to a multiple of ``block_n`` (sublane alignment) with
+    identity rows, which the elimination never couples to the real block.
+    ``interpret=None`` resolves from the backend
+    (``kernels.common.default_interpret``).
+    """
+    interpret = default_interpret(interpret)
+    Ap, bp = prepare_normal_eqs(A, rhs, mask, ridge)
+    B, N = bp.shape
+    pad = (-N) % block_n
+    if pad:
+        Ap = jnp.pad(Ap, ((0, 0), (0, pad), (0, pad)))
+        idx = jnp.arange(N, N + pad)
+        Ap = Ap.at[:, idx, idx].set(1.0)
+        bp = jnp.pad(bp, ((0, 0), (0, pad)))
+    out = wls_solve_pallas(Ap, bp, interpret=interpret)
+    return out[:, :N]
+
+
+__all__ = ["wls_solve", "wls_solve_pallas", "prepare_normal_eqs"]

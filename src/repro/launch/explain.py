@@ -65,11 +65,12 @@ def methods_table() -> str:
     lines = ["attribution methods (--method):"]
     for name in sorted(METHODS):
         spec = METHODS[name]
-        extra = (
-            f" [accum={spec.accum}, n_samples={spec.n_samples}]"
-            if spec.expand is not None
-            else f" [accum={spec.accum}]"
-        )
+        if spec.forward_only:
+            extra = f" [forward-only, n_masks={spec.n_masks}]"
+        elif spec.expand is not None:
+            extra = f" [accum={spec.accum}, n_samples={spec.n_samples}]"
+        else:
+            extra = f" [accum={spec.accum}]"
         lines.append(f"  {name:14s} {spec.description}{extra}")
     lines.append("schedule families (--schedule): " + ", ".join(sorted(SCHEDULES)))
     return "\n".join(lines)
@@ -127,6 +128,11 @@ def main() -> int:
     )
     ap.add_argument("--m", type=int, default=64)
     ap.add_argument("--n-int", type=int, default=4)
+    ap.add_argument(
+        "--n-masks", type=int, default=0,
+        help="perturbation mask budget P for forward-only methods "
+        "(occlusion/rise/lime; 0 = method default)",
+    )
     ap.add_argument("--requests", type=int, default=16, help="requests per round")
     ap.add_argument("--rounds", type=int, default=3, help="traffic rounds (round 1 compiles)")
     ap.add_argument("--min-seq", type=int, default=9)
@@ -243,6 +249,10 @@ def main() -> int:
 
     out = None
     compare = (args.schedule,) if args.schedule == "uniform" else (args.schedule, "uniform")
+    if METHODS[args.method].forward_only:
+        # perturbation methods never touch the interpolation schedule — one
+        # pass, no uniform comparison leg
+        compare = (args.schedule,)
     for sched_name in compare:
         engine = ExplainEngine(
             cfg,
@@ -257,13 +267,19 @@ def main() -> int:
             m_max=args.m_max,
             n_samples=args.n_samples,
             sigma=args.sigma,
+            n_masks=args.n_masks,
             fused=args.fused,
             use_kernels=args.use_kernels,
             attn=args.attn,
             autotune=args.autotune,
             **engine_kwargs,
         )
-        mode = f"adaptive tol={args.tol} ladder={engine.m_ladder}" if args.adaptive else f"m={args.m}"
+        if METHODS[args.method].forward_only:
+            mode = f"P={engine.n_masks} masks (forward-only)"
+        elif args.adaptive:
+            mode = f"adaptive tol={args.tol} ladder={engine.m_ladder}"
+        else:
+            mode = f"m={args.m}"
         samples = f" samples={engine.n_samples}" if engine.n_samples > 1 else ""
         flags = (" fused" if args.fused else "") + (" kernels" if args.use_kernels else "") \
             + (" autotuned" if args.autotune else "")

@@ -75,7 +75,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core import ig, methods as methods_mod
+from repro.core import ig, methods as methods_mod, perturb
 from repro.core.api import Explainer
 from repro.core.baselines import pad_embedding
 from repro.core.probes import probe_cost
@@ -260,6 +260,7 @@ class ExplainEngine:
         m_max: int = 0,
         n_samples: int = 0,
         sigma: float = 0.0,
+        n_masks: int = 0,
         sample_seed: int = 0,
         fused: bool = False,
         use_kernels: bool = False,
@@ -304,6 +305,16 @@ class ExplainEngine:
         self.seq_buckets = tuple(seq_buckets)
         self.batch_buckets = tuple(batch_buckets) if batch_buckets else None
         self.max_batch = max_batch
+        # forward-only perturbation class (DESIGN.md §8 / core.perturb): no
+        # VJP exists, so δ carries no convergence meaning — the adaptive
+        # m-ladder is a gradient-class contract and must be refused loudly
+        if self._spec.forward_only and adaptive:
+            raise ValueError(
+                f"method {self._spec.name!r} is forward-only; the δ-adaptive "
+                "m-ladder needs the gradient class (serve it fixed-budget)"
+            )
+        # mask budget P — the forward analogue of m (n_masks=0: spec default)
+        self.n_masks = n_masks if n_masks else (self._spec.n_masks or 64)
         self.mesh = mesh
         self.mesh_rules = mesh_rules
         # data-parallel extent: every bucket batch is padded to a multiple of
@@ -353,8 +364,10 @@ class ExplainEngine:
         Fused mode injects the custom-VJP interp-plus-carry op (its backward
         is the fused accumulation kernel, DESIGN.md §10) plus the class
         accumulator for quadratic methods; unfused mode injects the classic
-        interpolate + accumulate pair."""
-        if not self.use_kernels:
+        interpolate + accumulate pair. Forward-only methods have no gradient
+        accumulator — their kernel injection is the lstsq solve hook inside
+        ``_fwd_fn_at``."""
+        if not self.use_kernels or self._spec.forward_only:
             return {}
         from repro.kernels.ig_accum.ops import accum_fn_for
         from repro.kernels.interp_accum.ops import interp_accum
@@ -614,6 +627,92 @@ class ExplainEngine:
         bs.requests += len(bb.indices)
         return res
 
+    # -- forward-only (perturbation) class ---------------------------------
+
+    def _fwd_chunk(self) -> int:
+        """Masks per scan step — the engine chunk when it divides P, else
+        the whole mask batch (P is pow-2-sized by convention, so any pow-2
+        chunk divides it)."""
+        return self.chunk if self.chunk and self.n_masks % self.chunk == 0 else 0
+
+    def _fwd_fn_at(self, cfg: HotpathConfig):
+        """The compiled forward-evaluator unit: embeds + masks -> scores.
+
+        Masks arrive as RUNTIME data drawn at plan time (the expansion
+        happens outside the compiled program, mirroring the path-ensemble
+        contract), so one executable per (bucket, method, P) serves all
+        replayed traffic. LIME's group map and ragged-group validity are
+        pure in (bucket shape, mask) and recomputed inside the program —
+        every argument stays batch-leading for the mesh sharding rule.
+        ``use_kernels`` injects the Pallas WLS solve (``kernels/lstsq``)."""
+        f = self._f_for(cfg)
+        spec = self._spec
+        chunk = self._fwd_chunk()
+        solve = None
+        if self.use_kernels:
+            from repro.kernels.lstsq.ops import wls_solve
+
+            solve = wls_solve
+        if spec.accum == "lime":
+
+            def fwd_lime(embeds, baseline, aux, mask, z, zg):
+                G = zg.shape[-1]
+                gids = perturb.lime_group_ids(embeds.shape[1], G)
+                gvalid = perturb.group_real_mask(mask, gids, G)
+                return perturb.attribute_from_masks(
+                    f, embeds, baseline, aux,
+                    perturb.PerturbMasks(z, zg, gids), method=spec, mask=mask,
+                    group_valid=gvalid, chunk=chunk, solve_fn=solve,
+                )
+
+            return fwd_lime
+
+        def fwd(embeds, baseline, aux, mask, z):
+            return perturb.attribute_from_masks(
+                f, embeds, baseline, aux, perturb.PerturbMasks(z),
+                method=spec, mask=mask, chunk=chunk,
+            )
+
+        return fwd
+
+    def _fwd_bucket_inputs(self, bb: BucketBatch) -> tuple:
+        """Fixed-m inputs plus the plan-time mask draw.
+
+        Every row's masks come from ``perturb.request_key`` — pure in its
+        own request index, exactly the ensemble-expansion discipline: replay
+        is bit-identical, batch-pad rows duplicate the last real row's
+        masks, and a mesh-padded bucket draws the same per-row masks as the
+        single-device one."""
+        # callers strip f_x before planning (explain()/the scheduler flush);
+        # slice defensively so a stray endpoint can't widen the arg tuple
+        embeds, baseline, aux, mask = self._bucket_inputs(bb)[:4]
+        S = bb.bucket[1]
+        padded = list(bb.indices)
+        padded += [padded[-1]] * (bb.bucket[0] - len(padded))
+        keys = jax.vmap(
+            lambda i: perturb.request_key(self.sample_seed, S, i)
+        )(jnp.asarray(padded, jnp.uint32))
+        pm = perturb.draw_masks(self._spec.name, keys, S, self.n_masks)
+        if pm.groups is not None:
+            return embeds, baseline, aux, mask, pm.z, pm.groups
+        return embeds, baseline, aux, mask, pm.z
+
+    def _run_bucket_fwd(self, bb: BucketBatch) -> Any:
+        """One forward-evaluator bucket call -> ``perturb.PerturbResult``
+        (attributions are per POSITION (B, S), already exactly zero at
+        pads). Its own executable key class: no schedule, no n_int — the
+        mask budget P and the scan chunk are the program shape."""
+        args = self._fwd_bucket_inputs(bb)
+        bs = self.stats.bucket(bb.bucket)
+        key = ("fwd", bb.bucket, self._spec.accum, self.n_masks,
+               self._fwd_chunk(), self.use_kernels, self.attn, self._mesh_key)
+        ex = self._executable(
+            key, bs, self._fwd_fn_at(self._cfg_for(bb.bucket)), args
+        )
+        res = self._timed_call(bs, ex, args)
+        bs.requests += len(bb.indices)
+        return res
+
     def _timed_call(self, bs: BucketStats, ex: tuple, args: tuple) -> Any:
         """Run one cached ``(compiled, shardings)`` entry; sharded inputs are
         placed onto the mesh first (host→device layout is part of the serving
@@ -697,6 +796,15 @@ class ExplainEngine:
                 for r in requests
                 for _ in range(n)
             ]
+        if self._spec.forward_only:
+            # forward-only buckets always compute both endpoints inside the
+            # program (a donated f_x would fork the executable key class for
+            # no gradient saved — there are no gradients), so strip it and
+            # keep ONE compiled program per (bucket, method, P)
+            expanded = [
+                replace(r, f_x=None) if r.f_x is not None else r
+                for r in expanded
+            ]
         plan = plan_buckets(
             expanded,
             seq_buckets=self.seq_buckets,
@@ -714,8 +822,14 @@ class ExplainEngine:
                         r.pop("raw_token_scores")
                     out[ri] = r
                 continue
-            res = self._run_bucket(bb)
-            per_token = np.asarray(res.attributions.sum(-1))  # (B, S)
+            if self._spec.forward_only:
+                res = self._run_bucket_fwd(bb)
+                # perturbation scores are already per POSITION (B, S) —
+                # there is no feature axis to reduce
+                per_token = np.asarray(res.attributions)
+            else:
+                res = self._run_bucket(bb)
+                per_token = np.asarray(res.attributions.sum(-1))  # (B, S)
             for row, ri in enumerate(bb.indices):
                 r = {
                     "token_scores": per_token[row, : bb.lens[row]],

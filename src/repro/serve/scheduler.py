@@ -47,7 +47,7 @@ from __future__ import annotations
 import heapq
 import time
 import warnings
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Any, Callable, Optional, Union
 
 import jax
@@ -294,7 +294,9 @@ class MixedScheduler:
             id=self._next_id,
             kind="generate" if is_gen else "explain",
             tenant=req.tenant if is_gen else tenant,
-            slo=(slo or req.slo) if is_gen else (slo or EXPLAIN),
+            slo=(slo or req.slo) if is_gen else (
+                slo or (BATCH if self.engine._spec.forward_only else EXPLAIN)
+            ),
             submitted_s=self.time_fn(),
         )
         self._next_id += 1
@@ -347,10 +349,12 @@ class MixedScheduler:
         self.engine.stats.queue_depth = self.queue_depth
         prio, _, kind, payload = heapq.heappop(self._heap)
         if kind in ("prefill", "decode") and any(
-            k == "hop" for _, _, k, _ in self._heap
+            k in ("hop", "exp_fwd") for _, _, k, _ in self._heap
         ):
             # δ-aware preemption: this decode work runs AHEAD of queued
-            # escalation hops — count the deferral
+            # escalation hops — count the deferral. Forward-only mask
+            # batches (``exp_fwd``) sit at the same rung: they are BATCH
+            # -class throughput work that always yields to latency traffic
             self.engine.stats.preempted += 1
         handler = {
             "gen_flush": self._do_gen_flush,
@@ -358,6 +362,7 @@ class MixedScheduler:
             "prefill": self._do_prefill,
             "decode": self._do_decode,
             "exp_fixed": self._do_exp_fixed,
+            "exp_fwd": self._do_exp_fwd,
             "exp_start": self._do_exp_start,
             "hop": self._do_hop,
         }[kind]
@@ -400,6 +405,15 @@ class MixedScheduler:
     def _do_exp_flush(self, _payload) -> None:
         self._exp_flush_queued = False
         pending, self._pending_exp = self._pending_exp, []
+        forward_only = self.engine._spec.forward_only
+        if forward_only:
+            # forward-only buckets self-probe both endpoints inside ONE
+            # executable class — a decode-donated f_x would fork the compile
+            # key for nothing (there is no gradient pass to save)
+            pending = [
+                (t, pos, tok, replace(r, f_x=None) if r.f_x is not None else r)
+                for (t, pos, tok, r) in pending
+            ]
         reqs = [p[3] for p in pending]
         plan = plan_buckets(
             reqs,
@@ -411,7 +425,12 @@ class MixedScheduler:
         )
         for bb in plan:
             reqmap = [pending[i] for i in bb.indices]
-            if self.engine.adaptive:
+            if forward_only:
+                # perturbation mask batches are preemptible BATCH-class
+                # work: queued at the hop rung so interactive decode always
+                # dispatches first (and counts the deferral, step())
+                self._push(_PRIO_HOP, "exp_fwd", (bb, reqmap))
+            elif self.engine.adaptive:
                 run = AdaptiveBucketRun(self.engine, bb)
                 self._push(_PRIO_EXPLAIN_WORK, "exp_start", (run, reqmap))
             else:
@@ -587,6 +606,33 @@ class MixedScheduler:
                 self._deliver_degraded(t, pos, token, n_tokens=len(req.tokens))
             return
         per_token = np.asarray(res.attributions.sum(-1))
+        for row, (t, pos, token, _req) in enumerate(reqmap):
+            self._deliver(
+                t,
+                pos,
+                token,
+                {
+                    "token_scores": per_token[row, : bb.lens[row]],
+                    "delta": float(res.delta[row]),
+                    "f_x": float(res.f_x[row]),
+                    "f_baseline": float(res.f_baseline[row]),
+                    "bucket": bb.bucket,
+                    "degraded": False,
+                },
+            )
+
+    def _do_exp_fwd(self, payload) -> None:
+        bb, reqmap = payload
+        ok, res = self._run_item(
+            "exp_fwd", bb, lambda: self.engine._run_bucket_fwd(bb)
+        )
+        if not ok:
+            self.engine.stats.degraded += len(reqmap)
+            for (t, pos, token, req) in reqmap:
+                self._deliver_degraded(t, pos, token, n_tokens=len(req.tokens))
+            return
+        # perturbation scores are per POSITION already — no feature axis
+        per_token = np.asarray(res.attributions)
         for row, (t, pos, token, _req) in enumerate(reqmap):
             self._deliver(
                 t,

@@ -20,13 +20,23 @@ Properties:
   P4  adaptive resume is bit-identical to the fixed-m run over the
       materialized refined schedule, for every method's state pytree ×
       family (the IGState contract that δ-adaptive serving rests on).
+
+Forward-only (perturbation) class properties, over {occlusion, rise, lime}
+× bucket shapes (``repro.core.perturb``):
+  F1  masked/pad positions receive EXACTLY zero attribution, δ finite;
+  F2  batch-composition invariance: a row's scores are bit-identical no
+      matter what the other rows of its bucket hold (the padding-row
+      discipline the serving engine's bucket padding rests on);
+  F3  deterministic replay: masks are a pure function of (seed, bucket
+      width, request index), so repeated attribution is bit-exact and a
+      different seed actually moves the random-mask methods.
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import ig, methods, schedule
+from repro.core import ig, methods, perturb, schedule
 from repro.core.api import Explainer
 from repro.core.schedule import Schedule
 
@@ -38,9 +48,18 @@ except ImportError:  # pragma: no cover - exercised in CI where it IS present
     HAVE_HYPOTHESIS = False
 
 KEY = jax.random.PRNGKey(0)
-ALL_METHODS = sorted(methods.METHODS)
+# P1-P4 are gradient-class contracts (schedules, δ, IGState resume); the
+# forward-only perturbation class has its own property set F1-F3 below
+ALL_METHODS = sorted(
+    n for n in methods.METHODS if not methods.METHODS[n].forward_only
+)
+FWD_METHODS = sorted(
+    n for n in methods.METHODS if methods.METHODS[n].forward_only
+)
 ALL_SCHEDULES = sorted(schedule.SCHEDULES)
 GRID = [(m, s) for m in ALL_METHODS for s in ALL_SCHEDULES]
+FWD_BUCKETS = [(2, 8), (3, 12), (4, 16)]  # (B, S) incl. a non-pow2 width
+FWD_GRID = [(m, b) for m in FWD_METHODS for b in FWD_BUCKETS]
 
 
 def _explainer(f, method, sched_name, m=16, n_int=4, **kw):
@@ -201,6 +220,80 @@ def test_adaptive_bit_identical_grid(method, sched_name):
     check_adaptive_bit_identical(method, sched_name)
 
 
+# ------------------------- F1-F3: forward-only (perturbation) class
+
+
+def _fwd_f(xs, t):
+    # nonlinear, position-dependent: perturbing different positions moves
+    # the output by genuinely different amounts
+    scale = 1.0 + jnp.arange(xs.shape[1], dtype=jnp.float32)[None, :, None]
+    return jnp.sum(jnp.tanh(xs * scale) + 0.1 * xs**2, axis=(1, 2))
+
+
+def _fwd_inputs(B, S, seed=0):
+    x = jax.random.normal(jax.random.fold_in(KEY, 100 + seed), (B, S, 2)) + 1.0
+    return x, jnp.zeros_like(x), jnp.zeros((B,), jnp.int32)
+
+
+def check_fwd_masked_zero(method, B, S, seed=0):
+    x, bl, t = _fwd_inputs(B, S, seed)
+    lens = [max(1, S - 1 - i) for i in range(B)]  # ragged real widths
+    mask = jnp.asarray(
+        np.arange(S)[None, :] < np.asarray(lens)[:, None], jnp.float32
+    )
+    pe = perturb.PerturbExplainer(_fwd_f, method=method, n_masks=8, seed=seed)
+    res = pe.attribute(x, bl, t, mask=mask)
+    attr = np.asarray(res.attributions)
+    assert attr.shape == (B, S)
+    assert np.all(attr[np.asarray(mask) == 0.0] == 0.0), "padding must score 0"
+    assert np.any(attr[np.asarray(mask) == 1.0] != 0.0), "real positions must move"
+    assert np.isfinite(np.asarray(res.delta)).all()
+
+
+@pytest.mark.parametrize("method,bucket", FWD_GRID)
+def test_fwd_masked_zero_grid(method, bucket):
+    check_fwd_masked_zero(method, *bucket)
+
+
+@pytest.mark.parametrize("method,bucket", FWD_GRID)
+def test_fwd_batch_composition_invariance(method, bucket):
+    """F2: a row's masks are keyed by ITS index alone, and the forward
+    batch is row-parallel — swapping the other rows of the bucket leaves a
+    row's scores bit-identical (array_equal, not allclose). This is the
+    exact property that makes the engine's pad-row duplication sound."""
+    B, S = bucket
+    x, bl, t = _fwd_inputs(B, S)
+    pe = perturb.PerturbExplainer(_fwd_f, method=method, n_masks=8)
+    a = np.asarray(pe.attribute(x, bl, t).attributions)
+    # replace every row except row 0 with unrelated data
+    x2 = x.at[1:].set(jax.random.normal(jax.random.fold_in(KEY, 999), (B - 1, S, 2)))
+    b = np.asarray(pe.attribute(x2, bl, t).attributions)
+    np.testing.assert_array_equal(a[0], b[0])
+
+
+@pytest.mark.parametrize("method,bucket", FWD_GRID)
+def test_fwd_deterministic_replay(method, bucket):
+    B, S = bucket
+    x, bl, t = _fwd_inputs(B, S)
+    pe = perturb.PerturbExplainer(_fwd_f, method=method, n_masks=8, seed=3)
+    r1 = np.asarray(pe.attribute(x, bl, t).attributions)
+    r2 = np.asarray(pe.attribute(x, bl, t).attributions)
+    np.testing.assert_array_equal(r1, r2)
+    # the mask draw is pure in (seed, S, index): a different seed moves the
+    # random-mask methods; occlusion windows are deterministic by design
+    pm1 = pe.masks_for(B, S)
+    pm9 = perturb.PerturbExplainer(
+        _fwd_f, method=method, n_masks=8, seed=9
+    ).masks_for(B, S)
+    if method == "occlusion":
+        np.testing.assert_array_equal(np.asarray(pm1.z), np.asarray(pm9.z))
+    else:
+        assert not np.array_equal(np.asarray(pm1.z), np.asarray(pm9.z))
+    # ...and pure in the request index: rows draw DIFFERENT masks
+    if method != "occlusion":
+        assert not np.array_equal(np.asarray(pm1.z[0]), np.asarray(pm1.z[1]))
+
+
 # ---------------------------------------------------- hypothesis wrappers
 
 if HAVE_HYPOTHESIS:
@@ -243,3 +336,13 @@ if HAVE_HYPOTHESIS:
     )
     def test_adaptive_bit_identical_hypothesis(method, sched_name):
         check_adaptive_bit_identical(method, sched_name, m0=2, hops=1)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        method=st.sampled_from(FWD_METHODS),
+        B=st.integers(1, 4),
+        S=st.integers(2, 20),
+        seed=st.integers(0, 2**16),
+    )
+    def test_fwd_masked_zero_hypothesis(method, B, S, seed):
+        check_fwd_masked_zero(method, B, S, seed)

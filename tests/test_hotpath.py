@@ -34,7 +34,10 @@ from repro.core.paths import interp_add
 from repro.core.schedule import Schedule
 
 KEY = jax.random.PRNGKey(0)
-ALL_METHODS = sorted(methods.METHODS)
+# the fused hot path differentiates the model — gradient class only
+ALL_METHODS = sorted(
+    n for n in methods.METHODS if not methods.METHODS[n].forward_only
+)
 ALL_SCHEDULES = sorted(schedule.SCHEDULES)
 
 

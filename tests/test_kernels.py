@@ -18,6 +18,9 @@ from repro.kernels.ig_accum.ops import accum_fn_for, ig_accum, ig_accum_idgi
 from repro.kernels.ig_accum.ref import ig_accum_idgi_ref, ig_accum_ref
 from repro.kernels.interpolate.ops import interpolate as interpolate_k
 from repro.kernels.interpolate.ref import interpolate_ref
+from repro.kernels.lstsq import ref as lstsq_ref
+from repro.kernels.lstsq.ops import prepare_normal_eqs, wls_solve
+from repro.kernels.lstsq.ref import wls_solve_ref
 
 KEY = jax.random.PRNGKey(0)
 
@@ -267,3 +270,113 @@ def test_flash_wrapper_model_layout():
     got = flash_attention(q, k, v, causal=True, block_q=128, block_k=128)
     want = blocked_attention(q, k, v, causal=True, block_q=128, block_k=128)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-2, atol=2e-3)
+
+
+# ------------------------------------------------- lstsq (LIME WLS solve)
+
+
+def _wls_system(B, P, N, dtype, *, seed=0, dup_cols=0):
+    """A well-posed weighted design and its normal equations (B, N, N)/(B, N).
+
+    ``dup_cols`` > 0 duplicates trailing design columns — an exactly
+    rank-deficient XᵀWX that only the ridge makes solvable."""
+    k = jax.random.fold_in(KEY, seed)
+    X = jax.random.normal(k, (B, P, N))
+    if dup_cols:
+        X = X.at[..., -dup_cols:].set(X[..., :dup_cols])
+    w = jax.random.uniform(jax.random.fold_in(k, 1), (B, P), minval=0.1)
+    y = jax.random.normal(jax.random.fold_in(k, 2), (B, P))
+    A, rhs = lstsq_ref.normal_eqs(X, w, y)
+    return A.astype(dtype), rhs.astype(dtype)
+
+
+def _lstsq_tol(dtype):
+    # the solve amplifies input error by the (ridge-bounded) condition
+    # number, so the bands are wider than the elementwise kernels'
+    return {jnp.float32: 1e-3, jnp.float64: 1e-8, jnp.bfloat16: 1e-3}[dtype]
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("B,P,N", [(1, 9, 3), (2, 21, 7), (3, 40, 17), (2, 50, 22)])
+def test_wls_solve_matches_ref_and_lstsq(B, P, N, dtype):
+    """Pallas Gauss–Jordan vs the jnp oracle vs ``jnp.linalg.lstsq`` on the
+    SAME prepared (ridge-regularized) system — odd / non-pow2 N exercises
+    the identity-row padding to the sublane multiple."""
+    with _dtype_ctx(dtype):
+        A, rhs = _wls_system(B, P, N, dtype)
+        ridge = 0.1
+        got = wls_solve(A, rhs, ridge=ridge, interpret=True)
+        want = wls_solve_ref(A, rhs, ridge=ridge)
+        tol = _lstsq_tol(dtype)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float64), np.asarray(want, np.float64),
+            rtol=tol, atol=tol,
+        )
+        Ap, bp = prepare_normal_eqs(A, rhs, ridge=ridge)
+        direct = jnp.stack(
+            [jnp.linalg.lstsq(Ap[b], bp[b])[0] for b in range(B)]
+        )
+        np.testing.assert_allclose(
+            np.asarray(got, np.float64), np.asarray(direct, np.float64),
+            rtol=10 * tol, atol=10 * tol,
+        )
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("B,P,N", [(2, 21, 7), (3, 40, 17)])
+def test_wls_solve_ragged_mask(B, P, N, dtype):
+    """Masked (ragged-batch) entries are pinned: β EXACTLY zero there, and
+    the valid block solves the same system the oracle solves."""
+    with _dtype_ctx(dtype):
+        A, rhs = _wls_system(B, P, N, dtype, seed=3)
+        mask = _ragged_mask(B, N)
+        got = wls_solve(A, rhs, mask=mask, ridge=0.1, interpret=True)
+        want = wls_solve_ref(A, rhs, mask=mask, ridge=0.1)
+        assert np.all(np.asarray(got)[np.asarray(mask) == 0.0] == 0.0)
+        tol = _lstsq_tol(dtype)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float64), np.asarray(want, np.float64),
+            rtol=tol, atol=tol,
+        )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_wls_solve_rank_deficient_regularized(dtype, B=2, P=24, N=8):
+    """Duplicated design columns make XᵀWX exactly singular; the ridge is
+    what makes the system solvable, and the no-pivot sweep must still agree
+    with the oracle AND actually satisfy the regularized equations."""
+    with _dtype_ctx(dtype):
+        A, rhs = _wls_system(B, P, N, dtype, seed=7, dup_cols=2)
+        ridge = 0.5
+        got = wls_solve(A, rhs, ridge=ridge, interpret=True)
+        want = wls_solve_ref(A, rhs, ridge=ridge)
+        tol = _lstsq_tol(dtype)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float64), np.asarray(want, np.float64),
+            rtol=tol, atol=tol,
+        )
+        Ap, bp = prepare_normal_eqs(A, rhs, ridge=ridge)
+        resid = jnp.einsum("bij,bj->bi", Ap, got) - bp
+        assert float(jnp.abs(resid).max()) < 10 * tol * float(jnp.abs(bp).max() + 1.0)
+
+
+def test_wls_solve_inside_lime():
+    """The kernel drops into the LIME solve hook and reproduces the oracle
+    end-to-end (the engine's use_kernels injection point)."""
+    from repro.core import perturb
+
+    def f(xs, t):
+        return jnp.sum(jnp.tanh(xs), axis=(1, 2))
+
+    x = jax.random.normal(KEY, (2, 12, 3)) + 1.0
+    bl = jnp.zeros_like(x)
+    t = jnp.zeros((2,), jnp.int32)
+    base = perturb.PerturbExplainer(f, method="lime", n_masks=16)
+    kern = perturb.PerturbExplainer(
+        f, method="lime", n_masks=16,
+        solve_fn=lambda A, rhs, **kw: wls_solve(A, rhs, interpret=True, **kw),
+    )
+    a = np.asarray(base.attribute(x, bl, t).attributions)
+    b = np.asarray(kern.attribute(x, bl, t).attributions)
+    # elimination order differs from LU under the small default ridge
+    np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-4)

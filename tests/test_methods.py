@@ -182,7 +182,15 @@ def test_methods_registry_errors():
         methods.get("nope")
     for name, spec in methods.METHODS.items():
         assert methods.get(name) is spec
-        assert spec.accum in ("riemann", "idgi")
+        if spec.forward_only:
+            # perturbation class: each method is its own executable class
+            # (no shared gradient accumulator), never grad-linear, and
+            # carries a positive default mask budget
+            assert spec.accum == name
+            assert not spec.grad_linear
+            assert spec.n_masks > 0
+        else:
+            assert spec.accum in ("riemann", "idgi")
         # row_spec strips expansion (the serving engine's compiled unit)
         assert spec.row_spec().expand is None
         assert spec.row_spec().accum == spec.accum
@@ -202,3 +210,17 @@ def test_baselines_registry_covers_all_and_errors(rng, key):
     np.testing.assert_array_equal(np.asarray(pe[0]), np.asarray(table[3]))
     with pytest.raises(ValueError, match="valid baselines.*black"):
         baselines.get("transparent")
+
+
+@pytest.mark.parametrize(
+    "bad", ["", "blk", "Black", "zeros", "pad", "gauss", "white "]
+)
+def test_baselines_unknown_name_lists_valid(bad):
+    """The error path names the offender AND enumerates every valid
+    registry entry — the message users actually debug from."""
+    with pytest.raises(ValueError) as ei:
+        baselines.get(bad)
+    msg = str(ei.value)
+    assert repr(bad) in msg
+    for name in baselines.BASELINES:
+        assert name in msg

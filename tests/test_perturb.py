@@ -1,0 +1,207 @@
+"""Forward-only perturbation class: core unit contracts + serving paths.
+
+The conformance grid (tests/test_conformance.py -k fwd) proves the class
+properties — masked zeros, padding invariance, bit-exact replay. This file
+covers the machinery AROUND those properties:
+
+  (a) core/perturb plumbing: chunked scan == single-shot, f_x probe reuse,
+      the image<->cell view pair is exactly invertible, and the loud error
+      paths (wrong class in either direction, unknown mask method);
+  (b) engine serving: forward-only requests ride the bucketed executable
+      cache with zero steady-state recompiles, pad positions score exactly
+      zero, and the adaptive ladder refuses the class at construction;
+  (c) scheduler: forward-only explain traffic defaults to the preemptible
+      BATCH class and completes with finite scores.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.core import ig, perturb, schedule
+from repro.models.registry import Model
+from repro.runtime.fault import FaultConfig
+from repro.serve import ExplainEngine, ExplainRequest, MixedScheduler
+
+KEY = jax.random.PRNGKey(0)
+
+FWD_METHODS = ("occlusion", "rise", "lime")
+
+
+def _f(xs, t):
+    # position-weighted nonlinearity over (N, S, E) — cheap but not linear
+    w = 1.0 + jnp.arange(xs.shape[1], dtype=jnp.float32)[None, :, None]
+    return jnp.tanh((w * xs).sum((-2, -1)) / 8.0) + 0.01 * (xs**2).sum((-2, -1))
+
+
+def _inputs(B, S, E=3, seed=0):
+    k = jax.random.PRNGKey(seed)
+    x = jax.random.normal(k, (B, S, E))
+    t = jnp.zeros((B,), jnp.int32)
+    return x, jnp.zeros_like(x), t
+
+
+# ------------------------------------------------------- (a) core plumbing
+
+
+@pytest.mark.parametrize("method", FWD_METHODS)
+def test_chunked_scan_matches_single_shot(method):
+    """chunk is a memory knob, not a numerics knob: any divisor of P gives
+    the same scores to float tolerance (f32 reduction-order drift only —
+    lime's band is wider because the drift passes through the normal-eq
+    solve, which amplifies it by the system's conditioning)."""
+    x, bl, t = _inputs(2, 10)
+    full = perturb.PerturbExplainer(_f, method=method, n_masks=8, seed=3)
+    res = full.attribute(x, bl, t)
+    rtol = 1e-3 if method == "lime" else 1e-5
+    for chunk in (2, 4):
+        chunked = perturb.PerturbExplainer(
+            _f, method=method, n_masks=8, seed=3, chunk=chunk
+        ).attribute(x, bl, t)
+        np.testing.assert_allclose(
+            np.asarray(chunked.attributions), np.asarray(res.attributions),
+            rtol=rtol, atol=1e-6,
+        )
+
+
+@pytest.mark.parametrize("method", FWD_METHODS)
+def test_f_x_probe_reuse(method):
+    """Passing a known f(x) endpoint skips the x-probe and changes nothing:
+    the serving path hands the decode-donated probe straight in."""
+    x, bl, t = _inputs(2, 8)
+    pe = perturb.PerturbExplainer(_f, method=method, n_masks=8, seed=1)
+    pm = pe.masks_for(2, 8)
+    base = perturb.attribute_from_masks(_f, x, bl, t, pm, method=method)
+    reused = perturb.attribute_from_masks(
+        _f, x, bl, t, pm, method=method, f_x=_f(x, t)
+    )
+    np.testing.assert_allclose(
+        np.asarray(reused.attributions), np.asarray(base.attributions),
+        rtol=1e-6, atol=1e-7,
+    )
+    np.testing.assert_allclose(
+        np.asarray(reused.f_x), np.asarray(base.f_x), rtol=1e-6, atol=0
+    )
+
+
+def test_image_cell_views_are_inverse():
+    x = jax.random.uniform(KEY, (2, 8, 8, 3))
+    cells = perturb.image_to_cells(x, 4)
+    assert cells.shape == (2, 4, 4 * 4 * 3)
+    back = perturb.cells_to_image(cells, (8, 8, 3), 4)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+    # cell_fn(f) over the cell view == f over the image, exactly
+    f_img = lambda xs, t: xs.sum((1, 2, 3))
+    fc = perturb.cell_fn(f_img, (8, 8, 3), 4)
+    t = jnp.zeros((2,), jnp.int32)
+    np.testing.assert_array_equal(np.asarray(fc(cells, t)), np.asarray(f_img(x, t)))
+    # score broadcast: every pixel of a cell carries its cell's score
+    scores = jnp.arange(2 * 4, dtype=jnp.float32).reshape(2, 4)
+    px = perturb.cell_scores_to_pixels(scores, (8, 8, 3), 4)
+    assert px.shape == x.shape
+    assert float(px[1, 0, 0, 0]) == float(scores[1, 0])
+    assert float(px[1, 5, 5, 2]) == float(scores[1, 3])
+
+
+def test_occlusion_masks_cover_every_position():
+    for S, P in ((7, 4), (16, 16), (5, 8)):
+        z = np.asarray(perturb.occlusion_masks(S, P))
+        assert z.shape == (P, S)
+        # width-⌈S/P⌉ windows tile the sequence, repeating cyclically so the
+        # mask batch is always exactly P (shape pure in (S, P)): every
+        # position is occluded (z == 0) by ≥ 1 window, with cycle-uniform
+        # multiplicity (max − min ≤ 1 full repeats), and no window is wider
+        # than ⌈S/P⌉
+        per_pos = (z == 0.0).sum(0)
+        assert (per_pos >= 1).all()
+        window = -(-S // P)
+        n_win = -(-S // window)
+        assert per_pos.max() - per_pos.min() <= (1 if P % n_win else 0)
+        assert ((z == 0.0).sum(1) <= window).all()
+
+
+def test_class_boundaries_fail_loudly():
+    x, bl, t = _inputs(1, 6)
+    pm = perturb.PerturbExplainer(_f, method="rise", n_masks=4).masks_for(1, 6)
+    with pytest.raises(ValueError, match="gradient-based"):
+        perturb.attribute_from_masks(_f, x, bl, t, pm, method="ig")
+    with pytest.raises(ValueError, match="forward-only"):
+        ig.attribute(_f, x, bl, schedule.uniform(4), t, method="rise")
+    with pytest.raises(ValueError, match="unknown perturbation method"):
+        perturb.draw_masks("saliency", jax.random.PRNGKey(0)[None], 6, 4)
+
+
+# ------------------------------------------------------ (b) engine serving
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = reduced(ARCHS["llama3-8b"])
+    model = Model(cfg)
+    return cfg, model.init(KEY)
+
+
+def _requests(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        ExplainRequest(
+            tokens=rng.integers(1, cfg.vocab_size, s).astype(np.int32),
+            target=int(rng.integers(0, cfg.vocab_size)),
+        )
+        for s in lens
+    ]
+
+
+@pytest.mark.parametrize("method", FWD_METHODS)
+def test_engine_forward_only_zero_recompiles(lm, method):
+    cfg, params = lm
+    eng = ExplainEngine(
+        cfg, params, method=method, n_masks=8, seq_buckets=(8, 16)
+    )
+    assert eng.n_masks == 8
+    reqs = _requests(cfg, (5, 9, 12))
+    first = eng.explain(reqs, return_raw=True)
+    misses = eng.stats.misses
+    assert misses > 0
+    # fresh same-shape traffic: pure cache hits, bit-identical replay of
+    # the SAME requests (mask keys are pure in request index)
+    replay = eng.explain(reqs, return_raw=True)
+    assert eng.stats.misses == misses
+    for a, b, r in zip(first, replay, reqs):
+        assert a["token_scores"].shape == (len(r.tokens),)
+        np.testing.assert_array_equal(a["token_scores"], b["token_scores"])
+        assert np.isfinite(a["token_scores"]).all()
+        # raw bucket rows: exact zeros past the real length
+        assert (a["raw_token_scores"][len(r.tokens):] == 0.0).all()
+
+
+def test_engine_refuses_adaptive_forward_only(lm):
+    cfg, params = lm
+    with pytest.raises(ValueError, match="forward-only"):
+        ExplainEngine(cfg, params, method="occlusion", adaptive=True)
+
+
+# ----------------------------------------------------------- (c) scheduler
+
+
+def test_scheduler_forward_only_batch_class(lm):
+    cfg, params = lm
+    eng = ExplainEngine(
+        cfg, params, method="rise", n_masks=8, seq_buckets=(8, 16)
+    )
+    sched = MixedScheduler(
+        eng, max_len=16, decode_chunk=2,
+        fault_cfg=FaultConfig(max_retries=1, backoff_base_s=0.0),
+    )
+    tickets = [
+        sched.submit(ExplainRequest(tokens=r.tokens, target=r.target))
+        for r in _requests(cfg, (5, 9))
+    ]
+    # no SLO given: the perturbation class defaults to preemptible BATCH
+    assert all(t.slo.name == "batch" for t in tickets)
+    sched.run_until_idle()
+    for t in tickets:
+        assert t.status == "done"
+        assert not t.result["degraded"]
+        assert np.isfinite(t.result["token_scores"]).all()

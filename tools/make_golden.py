@@ -13,6 +13,7 @@ in the commit message — a diff here is the test's entire point.
 """
 from __future__ import annotations
 
+import argparse
 import os
 
 import jax
@@ -20,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.paper_cnn import CONFIG as CNN_CONFIG
+from repro.core import perturb
 from repro.core.api import Explainer
 from repro.core.methods import METHODS
 from repro.models import cnn
@@ -35,6 +37,9 @@ SCHEDULE = "paper"
 N_SAMPLES = 2
 SIGMA = 0.05
 TARGETS = (1, 2)
+# forward-only (perturbation) fixtures: CNN cell grid + mask budget
+N_MASKS = 16
+CELL = 4  # 32x32x3 -> 8x8 grid of 4x4x3 cells (S=64 positions)
 
 
 def golden_inputs():
@@ -61,22 +66,50 @@ def golden_explainer(f, method: str) -> Explainer:
     )
 
 
+def golden_perturb_result(f, x, bl, t, method: str):
+    """Forward-only fixture pipeline: same seeded CNN and input batch,
+    attributed over the 4x4x3 cell grid by ``repro.core.perturb`` — the
+    scores are per CELL (B, 64), not per pixel."""
+    img_shape = tuple(x.shape[1:])
+    fc = perturb.cell_fn(f, img_shape, CELL)
+    pe = perturb.PerturbExplainer(fc, method=method, n_masks=N_MASKS, seed=SEED)
+    return pe.attribute(
+        perturb.image_to_cells(x, CELL), perturb.image_to_cells(bl, CELL), t
+    )
+
+
+def _write(path: str, res) -> None:
+    np.savez_compressed(
+        path,
+        attributions=np.asarray(res.attributions, np.float32),
+        f_x=np.asarray(res.f_x, np.float32),
+        f_baseline=np.asarray(res.f_baseline, np.float32),
+        delta=np.asarray(res.delta, np.float32),
+        meta=np.asarray([SEED, BATCH, M, N_INT, N_SAMPLES], np.int64),
+    )
+    print(f"{path}: |attr| mean {np.abs(np.asarray(res.attributions)).mean():.3e} "
+          f"delta {np.asarray(res.delta)}")
+
+
 def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--forward-only", action="store_true",
+        help="regenerate ONLY the perturbation-class fixtures "
+        "(occlusion/rise/lime); gradient goldens stay untouched",
+    )
+    args = ap.parse_args()
     os.makedirs(GOLDEN_DIR, exist_ok=True)
     f, x, bl, t = golden_inputs()
     for method in sorted(METHODS):
-        res = golden_explainer(f, method).attribute(x, bl, t)
-        path = os.path.join(GOLDEN_DIR, f"cnn_{method}.npz")
-        np.savez_compressed(
-            path,
-            attributions=np.asarray(res.attributions, np.float32),
-            f_x=np.asarray(res.f_x, np.float32),
-            f_baseline=np.asarray(res.f_baseline, np.float32),
-            delta=np.asarray(res.delta, np.float32),
-            meta=np.asarray([SEED, BATCH, M, N_INT, N_SAMPLES], np.int64),
-        )
-        print(f"{path}: |attr| mean {np.abs(np.asarray(res.attributions)).mean():.3e} "
-              f"delta {np.asarray(res.delta)}")
+        spec = METHODS[method]
+        if args.forward_only and not spec.forward_only:
+            continue
+        if spec.forward_only:
+            res = golden_perturb_result(f, x, bl, t, method)
+        else:
+            res = golden_explainer(f, method).attribute(x, bl, t)
+        _write(os.path.join(GOLDEN_DIR, f"cnn_{method}.npz"), res)
     return 0
 
 
