@@ -162,6 +162,31 @@ def vit_accuracy(params, n: int = 256) -> float:
     return float((pred == labels).mean())
 
 
+def prompt_pool(rng, vocab_size: int, n: int, *, lengths=(5, 6, 7)) -> list:
+    """``n`` distinct int32 prompts with cycled lengths — the unique-request
+    pool that repeat traffic (``zipf_sample``) draws from. Shared by the
+    mixed-serving and cold-start benchmarks so both sweep the same
+    traffic shape."""
+    return [
+        rng.integers(1, vocab_size, int(lengths[i % len(lengths)])).astype(np.int32)
+        for i in range(n)
+    ]
+
+
+def zipf_sample(rng, pool_size: int, n: int, *, alpha: float = 1.1) -> np.ndarray:
+    """``n`` indices into a pool, rank-frequency p ∝ (rank+1)^-alpha.
+
+    BOUNDED, unlike ``np.random.zipf`` (whose support is unbounded): every
+    draw lands inside the pool, with the head ranks dominating — the
+    repeat-heavy pattern production explain traffic shows, and what the
+    content-addressed result cache (docs/caching.md) is built for.
+    """
+    ranks = np.arange(pool_size, dtype=np.float64)
+    p = (ranks + 1.0) ** -alpha
+    p /= p.sum()
+    return rng.choice(pool_size, size=n, p=p)
+
+
 def cnn_prob_fn(params):
     """f(images, targets) -> target-class probability (the paper's f)."""
     return partial(cnn.prob_fn, CNN_CONFIG, params)

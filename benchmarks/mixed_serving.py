@@ -38,6 +38,8 @@ import time
 import jax
 import numpy as np
 
+from benchmarks.common import prompt_pool
+
 # SLO gate slack: the structural claim is "decode waits behind at most one
 # in-flight explain item"; 2 injected-sleep units plus a CI-noise pad bound
 # that without gating raw wall-clock
@@ -83,10 +85,7 @@ def run(
     )
     sched = MixedScheduler(engine, max_len=16, decode_chunk=2)
     rng = np.random.default_rng(seed)
-    prompts = [
-        rng.integers(1, cfg.vocab_size, 5 + (i % 3)).astype(np.int32)
-        for i in range(requests)
-    ]
+    prompts = prompt_pool(rng, cfg.vocab_size, requests)
 
     out = {
         "arch": arch, "requests": requests, "gen_tokens": gen_tokens,

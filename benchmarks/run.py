@@ -109,6 +109,14 @@ def main() -> int:
         "on the LM + ViT workloads) -> results/BENCH_attention.json "
         "(with --smoke: the CI-sized config)",
     )
+    ap.add_argument(
+        "--coldstart",
+        action="store_true",
+        help="cold-start + repeat-traffic gate only (content-addressed "
+        "result cache bit-identity and hit latency, warm-start restore "
+        "with zero compiles, hop-zero rung elevation) "
+        "-> results/BENCH_coldstart.json (with --smoke: the CI-sized config)",
+    )
     args = ap.parse_args()
 
     if args.mesh:
@@ -158,6 +166,23 @@ def main() -> int:
             "pass": out["pass"],
         })
         print(f"# mixed-serving bench -> {path}")
+        return 0 if out["pass"] else 1
+
+    if args.coldstart:
+        from benchmarks import coldstart
+
+        out = coldstart.run(smoke=args.smoke)
+        path = _write("BENCH_coldstart.json", out)
+        _trajectory("coldstart", {
+            "smoke": args.smoke,
+            "gates": out["gates"],
+            "hit_rate": out["hit_rate"],
+            "steady_state_recompiles": out["steady_state_recompiles"],
+            "warm_speedup": out["warm"]["speedup"],
+            "warm_to_first_s": out["warm"]["warm_to_first_s"],
+            "pass": out["pass"],
+        })
+        print(f"# coldstart bench -> {path}")
         return 0 if out["pass"] else 1
 
     if args.attention:

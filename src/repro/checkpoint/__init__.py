@@ -1,8 +1,10 @@
 from repro.checkpoint.manager import (
     CheckpointManager,
-    save_checkpoint,
-    restore_checkpoint,
+    atomic_dir,
     latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+    sha256_file,
 )
 
 __all__ = [
@@ -10,4 +12,6 @@ __all__ = [
     "save_checkpoint",
     "restore_checkpoint",
     "latest_step",
+    "atomic_dir",
+    "sha256_file",
 ]

@@ -20,6 +20,7 @@ Multi-host note: each host writes only the shards of its addressable data
 """
 from __future__ import annotations
 
+import contextlib
 import hashlib
 import json
 import os
@@ -27,7 +28,7 @@ import shutil
 import tempfile
 import threading
 import time
-from typing import Any, Optional
+from typing import Any, Iterator, Optional
 
 import jax
 import jax.numpy as jnp
@@ -65,7 +66,8 @@ def _tree_paths(tree: Any) -> list[str]:
     return [jax.tree_util.keystr(p) for p in paths]
 
 
-def _sha256(path: str) -> str:
+def sha256_file(path: str) -> str:
+    """Streaming sha256 hex digest of one file (the manifest's shard hash)."""
     h = hashlib.sha256()
     with open(path, "rb") as f:
         for chunk in iter(lambda: f.read(1 << 20), b""):
@@ -73,12 +75,38 @@ def _sha256(path: str) -> str:
     return h.hexdigest()
 
 
+_sha256 = sha256_file  # internal alias, kept for callers of the old name
+
+
+@contextlib.contextmanager
+def atomic_dir(final: str) -> Iterator[str]:
+    """tmp-dir + atomic-rename write discipline, shared with warm-start
+    persistence (``serve.warm_state``): yields a temp directory next to
+    ``final``; on clean exit it REPLACES ``final`` in one ``os.replace``,
+    on exception the temp dir is removed and ``final`` is untouched — a
+    crash mid-write can never leave a half-valid directory behind."""
+    parent = os.path.dirname(final) or "."
+    os.makedirs(parent, exist_ok=True)
+    tmp = tempfile.mkdtemp(prefix=os.path.basename(final) + ".tmp-", dir=parent)
+    try:
+        yield tmp
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)  # atomic on POSIX
+
+
 def save_checkpoint(directory: str, step: int, tree: Any) -> str:
     """Write a sharded, content-hashed, atomically-renamed checkpoint."""
-    os.makedirs(directory, exist_ok=True)
     final = os.path.join(directory, f"step_{step:08d}")
-    tmp = tempfile.mkdtemp(prefix=f"step_{step:08d}.tmp-", dir=directory)
+    with atomic_dir(final) as tmp:
+        _write_checkpoint_files(tmp, step, tree)
+    return final
 
+
+def _write_checkpoint_files(tmp: str, step: int, tree: Any) -> None:
     leaves, treedef = jax.tree.flatten(tree)
     names = [f"leaf_{i:05d}" for i in range(len(leaves))]
     # greedy pack leaves into ~_SHARD_BYTES shard files
@@ -117,11 +145,6 @@ def save_checkpoint(directory: str, step: int, tree: Any) -> str:
     }
     with open(os.path.join(tmp, _MANIFEST), "w") as f:
         json.dump(manifest, f)
-
-    if os.path.exists(final):
-        shutil.rmtree(final)
-    os.replace(tmp, final)  # atomic on POSIX
-    return final
 
 
 def _validate(path: str) -> bool:

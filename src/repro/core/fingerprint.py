@@ -1,0 +1,53 @@
+"""Content fingerprints for (config, params) — the result-cache identity.
+
+A cross-request attribution cache (``serve.result_cache``) and warm-start
+persistence (``serve.warm_state``) both need to answer "is this the same
+model?" byte-precisely: an attribution computed under different weights is a
+different artifact, and a restored executable whose closure baked different
+params would silently return wrong results. The fingerprint is sha256 over
+
+  * the frozen ``ArchConfig``'s ``repr`` (deterministic for a frozen
+    dataclass: field order is class order, values are primitives), and
+  * every param leaf's tree path, dtype, shape, and raw bytes.
+
+Hashing a reduced config's params is ~ms; for production-size trees callers
+should compute it once and reuse (``ExplainEngine.model_fingerprint`` caches).
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def config_fingerprint(cfg: Any) -> str:
+    """sha256 hex of the config's deterministic ``repr``."""
+    return hashlib.sha256(repr(cfg).encode()).hexdigest()
+
+
+def params_fingerprint(params: Any) -> str:
+    """sha256 hex over every leaf's (tree path, dtype, shape, bytes).
+
+    The tree path rides the hash so structurally different trees with the
+    same leaf bytes never collide; leaves are hashed in flatten order, which
+    is deterministic for a given tree.
+    """
+    h = hashlib.sha256()
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    for path, leaf in flat:
+        a = np.asarray(leaf)
+        h.update(jax.tree_util.keystr(path).encode())
+        h.update(str(a.dtype).encode())
+        h.update(str(a.shape).encode())
+        h.update(np.ascontiguousarray(a).tobytes())
+    return h.hexdigest()
+
+
+def model_fingerprint(cfg: Any, params: Any) -> str:
+    """One identity for (architecture, weights) — what caches key on."""
+    h = hashlib.sha256()
+    h.update(config_fingerprint(cfg).encode())
+    h.update(params_fingerprint(params).encode())
+    return h.hexdigest()

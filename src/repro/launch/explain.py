@@ -37,6 +37,8 @@ attention; ``--workload`` picks what gets explained:
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 
 import jax
@@ -80,6 +82,10 @@ def report(engine: ExplainEngine) -> None:
     st = engine.stats
     print(f"  executable cache: hits={st.hits} misses={st.misses} "
           f"hit_rate={st.hit_rate:.2f}")
+    if engine.result_cache is not None:
+        print(f"  result cache: hits={st.result_hits} misses={st.result_misses} "
+              f"hit_rate={st.result_hit_rate:.2f} evictions={st.result_evictions} "
+              f"bytes={st.result_bytes}")
     if st.degraded or st.preempted or st.queue_depth:
         print(f"  scheduler: degraded={st.degraded} preempted={st.preempted} "
               f"queue_depth={st.queue_depth}")
@@ -177,6 +183,24 @@ def main() -> int:
         help="load per-(bucket, device) tuned configs from results/autotune_<device>.json",
     )
     ap.add_argument(
+        "--result-cache", type=int, default=0, metavar="MB",
+        help="content-addressed attribution cache budget in MB (0 = off); "
+        "repeat requests replay bit-identically without touching the engine "
+        "(docs/caching.md)",
+    )
+    ap.add_argument(
+        "--warm-state", default="", metavar="DIR",
+        help="warm-start persistence directory: restore the AOT executable "
+        "set (+ autotune entries + hop-zero history) before serving and "
+        "save it after — a restarted process reaches its first explanation "
+        "with zero compiles (docs/caching.md)",
+    )
+    ap.add_argument(
+        "--hop-zero", action="store_true",
+        help="with --adaptive: start each bucket at the δ-history quantile "
+        "rung instead of the base rung (repeat traffic skips known hops)",
+    )
+    ap.add_argument(
         "--mesh", default="",
         help="'dp,tp' device mesh for sharded serving (e.g. 4,1); empty = single-device",
     )
@@ -272,8 +296,21 @@ def main() -> int:
             use_kernels=args.use_kernels,
             attn=args.attn,
             autotune=args.autotune,
+            result_cache=args.result_cache * (1 << 20),
+            hop_zero=args.hop_zero,
             **engine_kwargs,
         )
+        # the warm state belongs to the primary --schedule engine only; the
+        # sweep's comparison engines would just warn about a context mismatch
+        if args.warm_state and sched_name == args.schedule:
+            from repro.serve import load_warm_state
+
+            rep = load_warm_state(engine, args.warm_state)
+            if rep.restored:
+                print(f"warm state: restored {rep.executables} executables "
+                      f"via {rep.via}")
+            else:
+                print(f"warm state: cold start ({rep.reason})")
         if METHODS[args.method].forward_only:
             mode = f"P={engine.n_masks} masks (forward-only)"
         elif args.adaptive:
@@ -328,6 +365,14 @@ def main() -> int:
                          f" conv={sum(o.get('converged', False) for o in out)}/{len(out)}")
             print(line)
         report(engine)
+        if args.warm_state and sched_name == args.schedule:
+            from repro.serve import save_warm_state
+
+            save_warm_state(engine, args.warm_state)
+            with open(os.path.join(args.warm_state, "manifest.json")) as fh:
+                n_saved = json.load(fh)["n_executables"]
+            print(f"warm state: saved {n_saved} executables "
+                  f"to {args.warm_state}")
     scores = np.asarray(out[0]["token_scores"])
     if args.workload == "prompt":
         print("per-token attribution (pos, token, score):")

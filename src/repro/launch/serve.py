@@ -81,6 +81,7 @@ def run_mixed(cfg, params, args) -> int:
         seq_buckets=(8, 16, 32, 64),
         adaptive=args.adaptive,
         tol=args.tol,
+        result_cache=args.result_cache * (1 << 20),
     )
     max_len = args.prompt_len + args.tokens
     tenants = (
@@ -133,6 +134,10 @@ def run_mixed(cfg, params, args) -> int:
     st = engine.stats
     print(f"executable cache: hits={st.hits} misses={st.misses} "
           f"hit_rate={st.hit_rate:.2f}")
+    if engine.result_cache is not None:
+        print(f"result cache: hits={st.result_hits} misses={st.result_misses} "
+              f"hit_rate={st.result_hit_rate:.2f} evictions={st.result_evictions} "
+              f"bytes={st.result_bytes}")
     print(f"scheduler: degraded={st.degraded} preempted={st.preempted} "
           f"stragglers={len(sched.monitor.flagged)}")
     for name, s in sorted(sched.latency_summary().items()):
@@ -169,6 +174,10 @@ def main() -> int:
     ap.add_argument("--decode-chunk", type=int, default=8)
     ap.add_argument("--tenant-rate", type=float, default=0.0,
                     help="per-tenant admission rate in req/s (0 = unlimited)")
+    ap.add_argument("--result-cache", type=int, default=0, metavar="MB",
+                    help="content-addressed attribution cache budget in MB "
+                    "(0 = off): repeat explain traffic completes at admission "
+                    "without a queue slot (--mixed; docs/caching.md)")
     args = ap.parse_args()
 
     cfg = reduced(get_config(args.arch))

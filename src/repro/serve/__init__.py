@@ -31,6 +31,12 @@ from repro.serve.autotune import (
     bucket_key,
     chunk_candidates,
 )
+from repro.serve.result_cache import ResultCache
+from repro.serve.warm_state import (
+    WarmRestoreReport,
+    load_warm_state,
+    save_warm_state,
+)
 
 __all__ = [
     "ServeEngine",
@@ -61,4 +67,8 @@ __all__ = [
     "autotune_engine",
     "bucket_key",
     "chunk_candidates",
+    "ResultCache",
+    "WarmRestoreReport",
+    "load_warm_state",
+    "save_warm_state",
 ]

@@ -30,10 +30,12 @@ the scan boundaries between rungs. Adaptive serving keeps the engine-wide
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import re
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Optional, Sequence
 
@@ -108,15 +110,48 @@ class AutotuneCache:
 
     @classmethod
     def load(cls, results_dir: str = "results", device: Optional[str] = None):
-        """Load the device's cache; a missing file is an empty cache."""
+        """Load the device's cache; a missing file is an empty cache.
+
+        NEVER raises on a bad file: a corrupted/truncated JSON payload, a
+        non-dict payload, or a payload recorded for a DIFFERENT device kind
+        (someone copied a results dir between machines — its tuned chunks
+        would silently mis-tune this device) all warn and return an empty
+        cache. A broken autotune file may cost re-tuning, never serving.
+        """
         device = device or device_kind()
         path = cache_path(results_dir, device)
         if not os.path.exists(path):
             return cls(device=device)
-        with open(path) as fh:
-            payload = json.load(fh)
-        return cls(device=payload.get("device", device),
-                   entries=payload.get("entries", {}))
+        try:
+            with open(path) as fh:
+                payload = json.load(fh)
+            if not isinstance(payload, dict) or not isinstance(
+                payload.get("entries", {}), dict
+            ):
+                raise ValueError(f"malformed payload {type(payload).__name__}")
+        except (json.JSONDecodeError, ValueError, OSError) as e:
+            warnings.warn(
+                f"AutotuneCache: unreadable cache at {path} ({e}); "
+                "starting with an empty cache",
+                stacklevel=2,
+            )
+            return cls(device=device)
+        recorded = payload.get("device", device)
+        if recorded != device:
+            warnings.warn(
+                f"AutotuneCache: {path} was tuned for device {recorded!r}, "
+                f"not {device!r}; ignoring its entries",
+                stacklevel=2,
+            )
+            return cls(device=device)
+        return cls(device=device, entries=payload.get("entries", {}))
+
+    def entries_fingerprint(self) -> str:
+        """sha256 of the loaded entries — rides the result-cache key (a
+        tuned chunk changes scan boundaries and therefore attribution bits;
+        ``ExplainEngine.request_cache_key``)."""
+        blob = json.dumps(self.entries, sort_keys=True, default=str)
+        return hashlib.sha256(blob.encode()).hexdigest()
 
     def save(self, results_dir: str = "results") -> str:
         os.makedirs(results_dir, exist_ok=True)

@@ -64,11 +64,12 @@ recompiles at steady state, per-request shapes never exist.
 from __future__ import annotations
 
 import functools
+import hashlib
 import time
 import warnings
 import dataclasses
 from dataclasses import dataclass, field, replace
-from typing import Any, Optional, Sequence
+from typing import Any, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -78,11 +79,13 @@ from repro.configs.base import ArchConfig
 from repro.core import ig, methods as methods_mod, perturb
 from repro.core.api import Explainer
 from repro.core.baselines import pad_embedding
+from repro.core.fingerprint import model_fingerprint
 from repro.core.probes import probe_cost
 from repro.core.schedule import Schedule, family, m_ladder
 from repro.models.registry import model_for
 from repro.roofline import cost_analysis_dict
 from repro.serve.autotune import AutotuneCache, HotpathConfig, bucket_key
+from repro.serve.result_cache import ResultCache
 from repro.sharding import (
     DEFAULT_RULES,
     MeshRules,
@@ -180,11 +183,25 @@ class EngineStats:
     degraded: int = 0
     preempted: int = 0
     queue_depth: int = 0
+    # content-addressed RESULT cache (serve.result_cache) — a second cache
+    # with its own counters: `hits`/`misses` above are the EXECUTABLE cache
+    # (compile avoidance); these are whole-attribution replays (compute
+    # avoidance). Mirrored from the ResultCache so one stats object reports
+    # both in launch/explain and launch/serve
+    result_hits: int = 0
+    result_misses: int = 0
+    result_evictions: int = 0
+    result_bytes: int = 0
 
     @property
     def hit_rate(self) -> float:
         n = self.hits + self.misses
         return self.hits / n if n else 0.0
+
+    @property
+    def result_hit_rate(self) -> float:
+        n = self.result_hits + self.result_misses
+        return self.result_hits / n if n else 0.0
 
     def bucket(self, shape: tuple[int, int]) -> BucketStats:
         return self.buckets.setdefault(shape, BucketStats())
@@ -267,6 +284,10 @@ class ExplainEngine:
         attn: str = "auto",
         autotune: bool = False,
         autotune_dir: str = "results",
+        result_cache: Union[None, int, ResultCache] = None,
+        hop_zero: bool = False,
+        hop_zero_q: float = 0.75,
+        hop_zero_min: int = 8,
     ):
         # attention implementation of the SERVED model: "flash" rebuilds the
         # config with attn_impl="flash" so every executable differentiates
@@ -338,6 +359,35 @@ class ExplainEngine:
         self.model = model_for(cfg)
         self.stats = EngineStats()
         self._cache: dict[tuple, Any] = {}  # key -> compiled executable
+        # content-addressed attribution cache (serve.result_cache): an int
+        # is a byte budget, a ResultCache instance is shared/injected, None
+        # (default) disables — repeat requests then always recompute
+        if isinstance(result_cache, ResultCache):
+            self.result_cache: Optional[ResultCache] = result_cache
+        elif result_cache:
+            self.result_cache = (
+                ResultCache()  # True -> the default byte budget
+                if result_cache is True
+                else ResultCache(max_bytes=int(result_cache))
+            )
+        else:
+            self.result_cache = None
+        # hop-zero starting rung (DESIGN.md §7 amortization): pick the
+        # adaptive ladder's starting m from the per-(S-bucket, method)
+        # m_used-history quantile — repeat-heavy traffic skips the rungs it
+        # historically escalated through. History only accumulates from
+        # base-rung runs (no ratcheting) and never-seen buckets keep the
+        # base rung, so their traces are unchanged.
+        self.hop_zero = hop_zero and adaptive
+        self.hop_zero_q = hop_zero_q
+        self.hop_zero_min = hop_zero_min
+        self._delta_hist: dict[tuple[int, str], list[int]] = {}
+        # per-rung Explainer variants for hop-zero starts (m0 != m)
+        self._explainers_m: dict[int, Explainer] = {}
+        # (fn, arg ShapeDtypeStructs, donate_argnums) per compiled key —
+        # what warm-start persistence needs to jax.export the set
+        self._export_info: dict[tuple, tuple] = {}
+        self._model_fp: Optional[str] = None
         # model fns rebuilt at tuned attention block sizes (flash only):
         # (attn_block_q, attn_block_k) -> target_logprob_at_fn closure
         self._attn_fns: dict[tuple[int, int], Any] = {}
@@ -451,6 +501,82 @@ class ExplainEngine:
                 self._cfg_for(bucket), self.fused, self.use_kernels,
                 self.attn, self._mesh_key, with_fx)
 
+    # -- content-addressed identity (result cache + warm start) ------------
+
+    @property
+    def model_fingerprint(self) -> str:
+        """sha256 of (config repr, params bytes) — computed once, lazily
+        (hashing every param leaf is cheap on reduced models but real
+        weights should pay it a single time)."""
+        if self._model_fp is None:
+            self._model_fp = model_fingerprint(self.cfg, self.params)
+        return self._model_fp
+
+    def _context_parts(self) -> list:
+        """Everything engine-level that changes produced attribution BYTES.
+
+        Keyed by METHOD NAME, not the accumulator class executables share:
+        IDGI and IG attributions of one input are different artifacts. The
+        bucket ladders are absent on purpose — the padding-invariance
+        contract makes results independent of which bucket/batch a request
+        lands in (tests/test_explain_engine.py exercises it)."""
+        return [
+            "ctx-v1", self.model_fingerprint, self.method, self.schedule,
+            self.m, self.n_int, self.chunk, self.adaptive, self.tol,
+            self.m_max, self.n_samples, self.sigma, self.sample_seed,
+            self.n_masks, self.fused, self.use_kernels, self.attn,
+            self._mesh_key, self.pad_id, self._autotune_cache is not None,
+        ]
+
+    def warm_context(self) -> str:
+        """Identity a persisted warm state must match (serve.warm_state).
+
+        Excludes the autotune ENTRIES fingerprint: the warm state carries
+        the entries itself and installs them before any executable is
+        consulted, so a restarted engine whose autotune file is gone can
+        still restore."""
+        return hashlib.sha256(repr(self._context_parts()).encode()).hexdigest()
+
+    def request_cache_key(self, req: ExplainRequest) -> str:
+        """sha256 content key for one request's attribution result.
+
+        Engine context (including the loaded autotune entries — a tuned
+        chunk changes scan boundaries and therefore bits) + the request's
+        own bytes. The donated ``f_x`` rides the key conservatively — it is
+        a program input — but is dropped exactly where ``explain()`` strips
+        it (ensemble and forward-only methods), so donating and
+        self-probing variants of those methods share entries."""
+        parts = self._context_parts()
+        if self._autotune_cache is not None:
+            parts.append(self._autotune_cache.entries_fingerprint())
+        h = hashlib.sha256(repr(parts).encode())
+        tok = np.ascontiguousarray(np.asarray(req.tokens, np.int32))
+        h.update(str(tok.shape).encode())
+        h.update(tok.tobytes())
+        h.update(str(int(req.target)).encode())
+        if req.features is not None:
+            f = np.ascontiguousarray(np.asarray(req.features, np.float32))
+            h.update(b"feat")
+            h.update(str(f.shape).encode())
+            h.update(f.tobytes())
+        f_x = req.f_x
+        if self._spec.forward_only or self.n_samples > 1:
+            f_x = None
+        h.update(
+            b"fx" + (np.float32(f_x).tobytes() if f_x is not None else b"none")
+        )
+        return h.hexdigest()
+
+    def _sync_result_stats(self) -> None:
+        """Mirror the ResultCache counters onto EngineStats (satellite 1)."""
+        rc = self.result_cache
+        if rc is not None:
+            st = self.stats
+            st.result_hits = rc.hits
+            st.result_misses = rc.misses
+            st.result_evictions = rc.evictions
+            st.result_bytes = rc.bytes
+
     def _start_fn(self, embeds, baseline, aux, mask, f_x=None):
         """Adaptive rung 0: fused probe + base schedule + resumable stage 2.
 
@@ -477,6 +603,75 @@ class ExplainEngine:
         return self._explainer.resume(
             embeds, baseline, aux, new_nodes, state, mask=mask
         )
+
+    # -- hop-zero starting rung (DESIGN.md §7 amortization) ----------------
+
+    def _explainer_for_m(self, m0: int) -> Explainer:
+        """The per-row Explainer at ladder rung ``m0`` (hop-zero starts).
+
+        ``m0 == m`` is the construction-time instance; higher rungs get a
+        cached variant. The engine chunk divides m, m0 is a pow-2 multiple
+        of m, so the §7 one-chunk-per-ladder contract holds unchanged."""
+        if m0 == self.m:
+            return self._explainer
+        if m0 not in self._explainers_m:
+            self._explainers_m[m0] = replace(self._explainer, m=m0)
+        return self._explainers_m[m0]
+
+    def _start_fn_for(self, m0: int):
+        """``_start_fn`` at an elevated starting rung (same contract)."""
+        if m0 == self.m:
+            return self._start_fn
+        exp = self._explainer_for_m(m0)
+
+        def start_fn(embeds, baseline, aux, mask, f_x=None):
+            res, state, sched = exp.start(embeds, baseline, aux, mask=mask, f_x=f_x)
+            B = embeds.shape[0]
+            sched = Schedule(
+                jnp.broadcast_to(sched.alphas, (B, sched.alphas.shape[-1])),
+                jnp.broadcast_to(sched.weights, (B, sched.weights.shape[-1])),
+            )
+            return res, state, sched
+
+        return start_fn
+
+    def _hop_fn_for(self, m0: int):
+        if m0 == self.m:
+            return self._hop_fn
+        exp = self._explainer_for_m(m0)
+
+        def hop_fn(embeds, baseline, aux, mask, new_nodes, state):
+            return exp.resume(embeds, baseline, aux, new_nodes, state, mask=mask)
+
+        return hop_fn
+
+    def _hop_zero_m(self, bucket: tuple[int, int]) -> int:
+        """The adaptive ladder's starting rung for one bucket.
+
+        With enough recorded base-rung history for (S-bucket, method), the
+        smallest ladder rung covering the ``hop_zero_q`` quantile of final
+        ``m_used`` — repeat-heavy traffic starts where it historically
+        ended. Below ``hop_zero_min`` observations (and always for
+        never-seen buckets) the base rung ``m`` is returned, so such
+        traffic's m_used/δ traces are EXACTLY the non-hop-zero ones."""
+        if not self.hop_zero:
+            return self.m
+        hist = self._delta_hist.get((bucket[1], self.method))
+        if not hist or len(hist) < self.hop_zero_min:
+            return self.m
+        q = float(np.quantile(np.asarray(hist, np.float64), self.hop_zero_q))
+        for rung in self.m_ladder:
+            if rung >= q:
+                return rung
+        return self.m_ladder[-1]
+
+    def _record_m_used(self, seq_bucket: int, values: Sequence[int]) -> None:
+        """Accumulate base-rung-start ``m_used`` outcomes (the hop-zero
+        evidence; capped so a long-lived engine's history stays bounded)."""
+        hist = self._delta_hist.setdefault((seq_bucket, self.method), [])
+        hist.extend(int(v) for v in values)
+        if len(hist) > 512:
+            del hist[:-512]
 
     def _executable(
         self, key: tuple, bs: BucketStats, fn, args: tuple, donate: tuple = ()
@@ -545,7 +740,49 @@ class ExplainEngine:
         except Exception:  # noqa: BLE001 — backend-optional introspection
             pass
         self._cache[key] = (compiled, shardings)
+        # what serve.warm_state needs to serialize this entry portably
+        self._export_info[key] = (fn, sds, donate)
         return self._cache[key]
+
+    def precompile_hop_zero_starts(self) -> int:
+        """AOT-compile the start executables the δ-history now implies.
+
+        History accumulates DURING a serving run, so the elevated starting
+        rung ``_hop_zero_m`` would pick for a bucket may never have been
+        compiled by that run (its own starts used the rung chosen when each
+        batch arrived). ``save_warm_state`` calls this before serializing so
+        a restored engine replays previously-seen buckets with zero compiles
+        even where the restored history elevates the start. Shapes are free:
+        the rung only changes program constants, so the elevated executable
+        reuses the base start's recorded arg specs. Returns how many
+        executables were added (not charged to serving stats — this is
+        save-time work, not traffic)."""
+        if not self.hop_zero:
+            return 0
+        n = 0
+        for key in [k for k in self._cache if k[0] == "start"]:
+            bucket, with_fx = key[1], key[-1]
+            m0 = self._hop_zero_m(bucket)
+            if m0 == key[4]:  # history picks this rung already
+                continue
+            info = self._export_info.get(key)
+            if info is None or self._cache[key][1] is not None:
+                continue  # sharded/unexportable — mesh engines recompile
+            _, sds, donate = info
+            new_key = (
+                "start", bucket, self._spec.accum, self.schedule, m0,
+                self.n_int, self._explainer_for_m(m0).adaptive_chunk,
+                self.fused, self.use_kernels, self.attn, self._mesh_key,
+                with_fx,
+            )
+            if new_key in self._cache:
+                continue
+            fn = self._start_fn_for(m0)
+            compiled = jax.jit(fn, donate_argnums=donate).lower(*sds).compile()
+            self._cache[new_key] = (compiled, None)
+            self._export_info[new_key] = (fn, sds, donate)
+            n += 1
+        return n
 
     # -- serving -----------------------------------------------------------
 
@@ -771,6 +1008,40 @@ class ExplainEngine:
     ) -> list[dict]:
         """Serve a heterogeneous batch; results align with ``requests``.
 
+        With a ``result_cache``, each request's content key is consulted
+        BEFORE ``plan_buckets``: hits replay the stored result dict
+        bit-identically (a fresh copy — callers cannot corrupt the cache)
+        and only misses are planned, bucketed, and computed. Degraded
+        (fault-fallback) results are never cached. Everything below
+        describes the compute path.
+        """
+        rc = self.result_cache
+        if rc is None:
+            return self._explain_uncached(requests, return_raw=return_raw)
+        keys = [self.request_cache_key(r) for r in requests]
+        results: list[Optional[dict]] = [rc.get(k) for k in keys]
+        miss = [i for i, r in enumerate(results) if r is None]
+        if miss:
+            # always compute WITH raw rows so cached entries can serve both
+            # return_raw variants; the caller-facing copy is trimmed below
+            fresh = self._explain_uncached(
+                [requests[i] for i in miss], return_raw=True
+            )
+            for i, r in zip(miss, fresh):
+                if not r.get("degraded"):
+                    rc.put(keys[i], r)
+                results[i] = r
+        self._sync_result_stats()
+        if not return_raw:
+            for r in results:
+                r.pop("raw_token_scores", None)
+        return results
+
+    def _explain_uncached(
+        self, requests: Sequence[ExplainRequest], *, return_raw: bool = False
+    ) -> list[dict]:
+        """The compute path (``explain`` without the result cache).
+
         Each result dict: token_scores (S_req,), delta, f_x, f_baseline,
         bucket (B, S); with ``return_raw`` also raw_token_scores (S_bucket,)
         — the untrimmed row, exactly zero at padded positions. In adaptive
@@ -892,22 +1163,29 @@ class AdaptiveBucketRun:
         eng, bb = self.eng, self.bb
         assert not self._started
         self._started = True
-        self.chunk = eng._explainer.adaptive_chunk
+        # hop-zero (engine._hop_zero_m): with enough per-(S, method) history
+        # the ladder starts at the historical-quantile rung m0 >= m; cold
+        # buckets keep the base rung, so their traces are unchanged. The
+        # start key carries m0 and the rung's chunk — the m0 set is the
+        # ladder, so the executable set stays closed.
+        self.m0 = eng._hop_zero_m(bb.bucket)
+        self._rung_i = eng.m_ladder.index(self.m0) + 1
+        self.chunk = eng._explainer_for_m(self.m0).adaptive_chunk
         with_fx = bb.f_x is not None
         args = eng._bucket_inputs(bb)
-        key = ("start", bb.bucket, eng._spec.accum, eng.schedule, eng.m,
+        key = ("start", bb.bucket, eng._spec.accum, eng.schedule, self.m0,
                eng.n_int, self.chunk, eng.fused, eng.use_kernels, eng.attn,
                eng._mesh_key, with_fx)
         bs = eng.stats.bucket(bb.bucket)
-        ex = eng._executable(key, bs, eng._start_fn, args)
+        ex = eng._executable(key, bs, eng._start_fn_for(self.m0), args)
         res, state, sched = eng._timed_call(bs, ex, args)
         bs.requests += len(bb.indices)
 
         n_real = len(bb.indices)
         ast = eng.stats.adaptive
         ast.requests += n_real
-        ast.total_steps += n_real * eng.m
-        ast.launched_steps += bb.bucket[0] * eng.m
+        ast.total_steps += n_real * self.m0
+        ast.launched_steps += bb.bucket[0] * self.m0
         # per-real-request like total_steps (pad-row forwards are launch
         # overhead, visible via launched_steps' bucket padding instead); a
         # donated endpoint saves the α=1 probe forward per row
@@ -928,7 +1206,7 @@ class AdaptiveBucketRun:
         self.f_b = np.asarray(res.f_baseline)
         self.threshold = eng.tol * np.abs(self.f_x - self.f_b)
         self.per_token = np.asarray(res.attributions.sum(-1)).copy()  # (B, S)
-        self.m_used = np.full((bb.bucket[0],), eng.m, np.int64)
+        self.m_used = np.full((bb.bucket[0],), self.m0, np.int64)
         self.hops = np.zeros((bb.bucket[0],), np.int64)
 
         # survivors: real rows whose δ still exceeds tol·|f_x − f_b|
@@ -977,7 +1255,9 @@ class AdaptiveBucketRun:
         # f32 accumulator buffer in place instead of copying each rung
         # (DESIGN.md §10); it is rebuilt fresh per hop and never read
         # back after the call, so donation is always safe here
-        hop = eng._executable(hop_key, hbs, eng._hop_fn, hop_args, donate=(5,))
+        hop = eng._executable(
+            hop_key, hbs, eng._hop_fn_for(self.m0), hop_args, donate=(5,)
+        )
         res2, st2 = eng._timed_call(hbs, hop, hop_args)
         ast = eng.stats.adaptive
         ast.hop_calls += 1
@@ -1040,6 +1320,15 @@ class AdaptiveBucketRun:
                     "converged": converged,
                     "degraded": row in self._degraded,
                 }
+            )
+        # hop-zero evidence: ONLY base-rung starts contribute (an elevated
+        # start's m_used is floored at m0 — feeding it back would ratchet
+        # the quantile upward forever); degraded rows never converged by
+        # fiat, not by δ, so they are no evidence either
+        if self.m0 == eng.m:
+            eng._record_m_used(
+                bb.bucket[1],
+                [r["m_used"] for r in out if not r["degraded"]],
             )
         self._results = out
         return out

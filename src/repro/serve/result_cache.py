@@ -1,0 +1,124 @@
+"""Content-addressed attribution result cache (ISSUE 10 / docs/caching.md).
+
+At scale the dominant explain traffic pattern is REPEATS: the same
+(input, baseline, method) tuple arriving again. The cheapest gradient step
+is the one never taken — this module stores finished attribution result
+dicts under a sha256 content key and replays them bit-identically.
+
+Key contract (``ExplainEngine.request_cache_key``): the key is sha256 over
+the engine's *cache context* — everything that changes the produced bytes:
+method name (NOT the accumulator class: IDGI and IG attributions for the
+same input are different artifacts even though they share executables),
+schedule family, (m, n_int, chunk), the adaptive knobs (tol, m_max),
+ensemble identity (n_samples, sigma, sample_seed), the forward-only mask
+budget, fused/use_kernels/attn program flags, the mesh axis sizes, the
+baseline id (pad_id), the model fingerprint (config + params sha256,
+``core.fingerprint``), and a fingerprint of the loaded autotune entries
+(a tuned chunk changes scan boundaries and therefore bits) — concatenated
+with the request's own bytes: tokens, target, feature bytes, and the
+donated ``f_x`` endpoint (kept conservatively: a different donated value is
+a different program input).
+
+NOT keyed (see docs/caching.md for the full argument): the bucket shape and
+batch composition a request happens to land in — the padding-invariance
+contract makes results independent of co-batched traffic — and the hop-zero
+δ-history, which only moves the adaptive starting rung for MISSES.
+
+Replay is bit-identical by construction: ``get`` returns a fresh deep copy
+of the stored dict (arrays copied), so callers can never mutate the cached
+bytes; eviction is LRU under a byte budget with hit/miss/eviction counters
+mirrored onto ``EngineStats``.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Optional
+
+import numpy as np
+
+DEFAULT_BUDGET_BYTES = 256 * 1024 * 1024
+
+
+def _entry_bytes(result: dict) -> int:
+    """Approximate resident size of one cached result dict."""
+    n = 0
+    for k, v in result.items():
+        n += len(k) + 48  # dict slot + key overhead
+        if isinstance(v, np.ndarray):
+            n += int(v.nbytes)
+        else:
+            n += 32
+    return n
+
+
+def _copy_result(result: dict) -> dict:
+    """Deep-enough copy: arrays are copied, scalars/tuples are immutable."""
+    return {
+        k: (v.copy() if isinstance(v, np.ndarray) else v)
+        for k, v in result.items()
+    }
+
+
+class ResultCache:
+    """Byte-budget LRU of finished attribution result dicts.
+
+        >>> import numpy as np
+        >>> rc = ResultCache(max_bytes=1 << 20)
+        >>> rc.put("k", {"token_scores": np.ones(4, np.float32)})
+        >>> hit = rc.get("k")
+        >>> hit["token_scores"][0] = 0.0   # caller mutation...
+        >>> rc.get("k")["token_scores"][0]  # ...never corrupts the cache
+        np.float32(1.0)
+        >>> rc.get("absent") is None
+        True
+        >>> rc.hits, rc.misses
+        (2, 1)
+    """
+
+    def __init__(self, max_bytes: int = DEFAULT_BUDGET_BYTES):
+        assert max_bytes > 0, "a result cache needs a positive byte budget"
+        self.max_bytes = int(max_bytes)
+        self._entries: OrderedDict[str, tuple[dict, int]] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.bytes = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._entries
+
+    def get(self, key: str) -> Optional[dict]:
+        """The stored result as a fresh copy, or None; counts hit/miss and
+        refreshes LRU recency on hit."""
+        ent = self._entries.get(key)
+        if ent is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        self._entries.move_to_end(key)
+        return _copy_result(ent[0])
+
+    def put(self, key: str, result: dict) -> None:
+        """Store a copy of ``result``; evicts LRU entries past the budget.
+
+        An entry larger than the whole budget is refused (counted as an
+        eviction) — storing it would immediately evict everything including
+        itself. Re-putting an existing key replaces the entry (same bytes on
+        the serving path: the key is content-addressed).
+        """
+        size = _entry_bytes(result)
+        if size > self.max_bytes:
+            self.evictions += 1
+            return
+        old = self._entries.pop(key, None)
+        if old is not None:
+            self.bytes -= old[1]
+        self._entries[key] = (_copy_result(result), size)
+        self.bytes += size
+        while self.bytes > self.max_bytes:
+            _, (_, esize) = self._entries.popitem(last=False)
+            self.bytes -= esize
+            self.evictions += 1

@@ -301,6 +301,18 @@ class MixedScheduler:
         )
         self._next_id += 1
         self.tickets.append(t)
+        if not is_gen:
+            hit = self._cached_result(req)
+            if hit is not None:
+                # content-addressed replay (serve.result_cache): a hit is
+                # admitted BEFORE backpressure and rate checks — it costs no
+                # queue slot, no tenant budget, and never preempts decode,
+                # so cached traffic cannot push fresh traffic into rejection
+                t.result = hit
+                t._decode_done = True
+                t._pending_explains = 0
+                self._finish(t)
+                return t
         if self.queue_depth >= self.max_queue:
             t.status = "rejected_backpressure"
             self.rejected_backpressure += 1
@@ -576,6 +588,26 @@ class MixedScheduler:
 
     # -- explain items -------------------------------------------------------
 
+    def _cached_result(self, req: ExplainRequest) -> Optional[dict]:
+        """Consult the engine's content-addressed result cache (a fresh copy
+        on hit, raw row trimmed — tickets carry caller-facing dicts)."""
+        rc = self.engine.result_cache
+        if rc is None:
+            return None
+        hit = rc.get(self.engine.request_cache_key(req))
+        self.engine._sync_result_stats()
+        if hit is not None:
+            hit.pop("raw_token_scores", None)
+        return hit
+
+    def _cache_result(self, req: ExplainRequest, r: dict) -> None:
+        """Insert one finished result (degraded fallbacks are never cached —
+        replaying a fault-path zero vector forever would be wrong)."""
+        rc = self.engine.result_cache
+        if rc is not None and not r.get("degraded"):
+            rc.put(self.engine.request_cache_key(req), r)
+            self.engine._sync_result_stats()
+
     def _enqueue_explain(
         self,
         t: Ticket,
@@ -588,8 +620,15 @@ class MixedScheduler:
         if len(prompt) > max(self.engine.seq_buckets):
             self._deliver_degraded(t, pos, token, n_tokens=len(prompt))
             return
-        t._pending_explains += 1
         req = ExplainRequest(tokens=prompt, target=token, f_x=f_x)
+        hit = self._cached_result(req)
+        if hit is not None:
+            # per-token replay for generate+explain tickets: this position's
+            # attribution never reaches the explain queue
+            t._pending_explains += 1
+            self._deliver(t, pos, token, hit)
+            return
+        t._pending_explains += 1
         self._pending_exp.append((t, pos, token, req))
         if not self._exp_flush_queued:
             self._exp_flush_queued = True
@@ -606,20 +645,18 @@ class MixedScheduler:
                 self._deliver_degraded(t, pos, token, n_tokens=len(req.tokens))
             return
         per_token = np.asarray(res.attributions.sum(-1))
-        for row, (t, pos, token, _req) in enumerate(reqmap):
-            self._deliver(
-                t,
-                pos,
-                token,
-                {
-                    "token_scores": per_token[row, : bb.lens[row]],
-                    "delta": float(res.delta[row]),
-                    "f_x": float(res.f_x[row]),
-                    "f_baseline": float(res.f_baseline[row]),
-                    "bucket": bb.bucket,
-                    "degraded": False,
-                },
-            )
+        for row, (t, pos, token, req) in enumerate(reqmap):
+            r = {
+                "token_scores": per_token[row, : bb.lens[row]],
+                "delta": float(res.delta[row]),
+                "f_x": float(res.f_x[row]),
+                "f_baseline": float(res.f_baseline[row]),
+                "bucket": bb.bucket,
+                "degraded": False,
+                "raw_token_scores": per_token[row],
+            }
+            self._cache_result(req, r)
+            self._deliver(t, pos, token, r)
 
     def _do_exp_fwd(self, payload) -> None:
         bb, reqmap = payload
@@ -633,20 +670,18 @@ class MixedScheduler:
             return
         # perturbation scores are per POSITION already — no feature axis
         per_token = np.asarray(res.attributions)
-        for row, (t, pos, token, _req) in enumerate(reqmap):
-            self._deliver(
-                t,
-                pos,
-                token,
-                {
-                    "token_scores": per_token[row, : bb.lens[row]],
-                    "delta": float(res.delta[row]),
-                    "f_x": float(res.f_x[row]),
-                    "f_baseline": float(res.f_baseline[row]),
-                    "bucket": bb.bucket,
-                    "degraded": False,
-                },
-            )
+        for row, (t, pos, token, req) in enumerate(reqmap):
+            r = {
+                "token_scores": per_token[row, : bb.lens[row]],
+                "delta": float(res.delta[row]),
+                "f_x": float(res.f_x[row]),
+                "f_baseline": float(res.f_baseline[row]),
+                "bucket": bb.bucket,
+                "degraded": False,
+                "raw_token_scores": per_token[row],
+            }
+            self._cache_result(req, r)
+            self._deliver(t, pos, token, r)
 
     def _do_exp_start(self, payload) -> None:
         run, reqmap = payload
@@ -675,8 +710,9 @@ class MixedScheduler:
 
     def _deliver_run(self, run: AdaptiveBucketRun, reqmap) -> None:
         # results arrive in bb.indices order — exactly reqmap's order
-        for r, (t, pos, token, _req) in zip(run.results(), reqmap):
+        for r, (t, pos, token, req) in zip(run.results(), reqmap):
             r.pop("request", None)
+            self._cache_result(req, r)
             self._deliver(t, pos, token, r)
 
     # -- completion / degradation -------------------------------------------

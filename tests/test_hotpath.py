@@ -272,6 +272,66 @@ def test_fused_engine_matches_unfused_traces(lm_f32):
     assert traces[False] == traces[True]
 
 
+# ------------------------- (d') autotune cache load is corruption-proof
+
+
+def test_autotune_load_corrupted_json_warns_and_empties(tmp_path):
+    import warnings
+
+    from repro.serve.autotune import AutotuneCache, cache_path
+
+    path = cache_path(str(tmp_path))
+    with open(path, "w") as fh:
+        fh.write('{"device": "cpu", "entr')  # truncated mid-write
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        cache = AutotuneCache.load(str(tmp_path))
+    assert cache.entries == {}
+    assert any("unreadable" in str(x.message) for x in w)
+    # malformed-but-valid JSON (a list payload) is just as unreadable
+    with open(path, "w") as fh:
+        fh.write("[1, 2, 3]")
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        cache = AutotuneCache.load(str(tmp_path))
+    assert cache.entries == {}
+    assert any("unreadable" in str(x.message) for x in w)
+
+
+def test_autotune_load_device_mismatch_ignores_entries(tmp_path):
+    import json
+    import warnings
+
+    from repro.serve.autotune import AutotuneCache, cache_path, device_kind
+
+    path = cache_path(str(tmp_path))
+    with open(path, "w") as fh:
+        json.dump(
+            {"device": "tpu-v9000", "entries": {"k": {"chunk": 2}}}, fh
+        )
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        cache = AutotuneCache.load(str(tmp_path))
+    assert cache.device == device_kind() and cache.entries == {}, (
+        "another device's tuned chunks must never be adopted silently"
+    )
+    assert any("tuned for device" in str(x.message) for x in w)
+
+
+def test_autotune_entries_fingerprint_tracks_entries():
+    from repro.serve.autotune import AutotuneCache, HotpathConfig
+
+    a = AutotuneCache(device="cpu")
+    fp0 = a.entries_fingerprint()
+    a.put("k", HotpathConfig(chunk=2), {"wall_s": 0.1})
+    assert a.entries_fingerprint() != fp0, (
+        "a tuned chunk changes attribution bytes — the result-cache key "
+        "must move with it"
+    )
+    b = AutotuneCache(device="cpu", entries=dict(a.entries))
+    assert b.entries_fingerprint() == a.entries_fingerprint()
+
+
 # ------------------------------------------- (e) backend-resolved interpret
 
 
